@@ -1,0 +1,64 @@
+"""Paper Figures 3/6: MRSE vs the number of machines m (n fixed), normal
+and Byzantine. Expect MRSE decreasing in m with a flattening tail, and the
+sqrt(p/(mn)) optimal-rate scaling (Thm 4.3)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ProtocolConfig
+from repro.core import DPQNProtocol, get_problem
+from repro.data.synthetic import make_shards, target_theta
+
+
+def run(problem_name: str = "logistic", n: int = 500, p: int = 10,
+        m_grid=(10, 20, 40, 80), reps: int = 4, byz_frac: float = 0.0,
+        eps: float = 30.0, seed: int = 0):
+    prob = get_problem(problem_name)
+    t = target_theta(p)
+    rows = []
+    for m in m_grid:
+        X, y = make_shards(jax.random.PRNGKey(seed + m), problem_name,
+                           m, n, p)
+        nb = int(byz_frac * m)
+        byz = jnp.zeros((m,), bool).at[:nb].set(True) if nb else None
+        cfg = ProtocolConfig(eps=eps, delta=0.05)
+        proto = DPQNProtocol(prob, cfg)
+        errs = [float(jnp.linalg.norm(
+            proto.run(jax.random.PRNGKey(10 * m + r), X, y,
+                      byz_mask=byz).theta_qn - t))
+            for r in range(reps)]
+        rows.append({"m": m, "mrse": sum(errs) / len(errs),
+                     "rate": math.sqrt(p / (m * n))})
+    return rows
+
+
+def main(fast: bool = False):
+    out = {}
+    for byz in [0.0, 0.1]:
+        rows = run(reps=2 if fast else 4, byz_frac=byz,
+                   m_grid=(10, 20, 40) if fast else (10, 20, 40, 80))
+        tag = f"m_sweep{'_byz' if byz else ''}"
+        out[tag] = rows
+        print(f"== MRSE vs m ({'10% byz' if byz else 'normal'}) ==")
+        print(f"{'m':>5} {'mrse':>8} {'sqrt(p/mn)':>10} {'ratio':>7}")
+        for r in rows:
+            print(f"{r['m']:5d} {r['mrse']:8.4f} {r['rate']:10.4f} "
+                  f"{r['mrse']/r['rate']:7.2f}")
+        # claims: monotone decreasing in m; ratio to the optimal rate stays
+        # bounded once out of the noise-dominated small-m regime (at m=10
+        # the DP noise dominates and MRSE falls FASTER than sqrt(1/m) —
+        # the same steep left edge as the paper's Figures 3/6)
+        dec = all(b["mrse"] < a["mrse"] for a, b in zip(rows, rows[1:]))
+        ratios = [r["mrse"] / r["rate"] for r in rows if r["m"] >= 20]
+        bounded = max(ratios) < 4.0 * min(ratios)
+        out[tag + "_ok"] = bool(dec and bounded)
+        print("PASS" if dec and bounded else "FAIL",
+              "(decreasing + rate-consistent for m >= 20)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table
+(one row per arch x shape x mesh) and emit the markdown used by
+EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+
+def load(outdir: str = "experiments/dryrun") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def is_baseline(r: dict) -> bool:
+    """Baseline sweep rows only (perf-variant runs carry a variant tag)."""
+    return (not r.get("variant")
+            and r.get("agg", "dcq") == "dcq"
+            and r.get("strategy", "replicated") == "replicated"
+            and not r.get("fsdp"))
+
+
+def markdown_table(rows: List[dict], mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful FLOP ratio | peak mem/dev |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("mesh") != mesh or not is_baseline(r):
+            continue
+        pm = r.get("peak_memory_bytes")
+        pm_s = f"{pm/2**30:.1f} GiB" if pm else "?"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} | {pm_s} |")
+    return "\n".join(lines)
+
+
+def main(fast: bool = False):
+    rows = load()
+    if not rows:
+        print("no dry-run records yet — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --arch all "
+              "--shape all")
+        return {"rows": 0}
+    for mesh in sorted({r["mesh"] for r in rows}):
+        n = sum(1 for r in rows if r["mesh"] == mesh)
+        print(f"== roofline table ({mesh}; {n} rows) ==")
+        print(markdown_table(rows, mesh))
+    rows = [r for r in rows if is_baseline(r)]
+    # summary: worst useful ratio / most collective-bound
+    with_u = [r for r in rows if r.get("useful_ratio")]
+    if with_u:
+        worst = min(with_u, key=lambda r: r["useful_ratio"])
+        collb = max(rows, key=lambda r: r["collective_s"]
+                    / max(r["compute_s"] + r["memory_s"], 1e-12))
+        print(f"worst useful-FLOP ratio: {worst['arch']}/{worst['shape']} "
+              f"({worst['useful_ratio']:.2f})")
+        print(f"most collective-bound: {collb['arch']}/{collb['shape']} "
+              f"(coll {collb['collective_s']:.3g}s vs "
+              f"comp {collb['compute_s']:.3g}s)")
+    return {"rows": len(rows)}
+
+
+if __name__ == "__main__":
+    main()

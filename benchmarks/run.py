@@ -1,0 +1,53 @@
+"""Run every benchmark (one per paper table/figure + system benches).
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced rep counts (CI smoke)")
+    ap.add_argument("--out", default="experiments/bench_results.json")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (are_dcq, comm_cost, kernel_bench, mrse_vs_eps,
+                            mrse_vs_m, roofline_report, table1_digits)
+    suites = [
+        ("are_dcq (paper §1.2: ARE 0.955 vs 0.637)", are_dcq.main),
+        ("mrse_vs_eps (Figures 1/2/4/5)", mrse_vs_eps.main),
+        ("mrse_vs_m (Figures 3/6)", mrse_vs_m.main),
+        ("table1_digits (Table 1 stand-in)", table1_digits.main),
+        ("comm_cost (§1.2(1)/§6 budget+bytes)", comm_cost.main),
+        ("kernel_bench (Pallas hot-spots)", kernel_bench.main),
+        ("roofline_report (§Roofline table)", roofline_report.main),
+    ]
+    results, failures = {}, []
+    for name, fn in suites:
+        print(f"\n##### {name} #####")
+        t0 = time.time()
+        try:
+            results[name] = {"result": fn(fast=args.fast),
+                             "seconds": time.time() - t0}
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"\nwrote {args.out}")
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print(f"all {len(suites)} benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

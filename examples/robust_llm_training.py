@@ -1,0 +1,91 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter model for a
+few hundred steps with the paper's robust DP aggregation, comparing
+mean vs DCQ under Byzantine machines.
+
+The full xlstm-125m config (125M params) trains on CPU; pass --small for a
+quick run on the reduced config.
+
+    PYTHONPATH=src python examples/robust_llm_training.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint
+from repro.configs import get_config
+from repro.data.lm import synthetic_lm_batches
+from repro.dist.grad_agg import GradAggConfig
+from repro.models.model import Model
+from repro.train.optimizer import AdamW
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def run(arch: str, reduced: bool, steps: int, batch: int, seq: int,
+        machines: int, method: str, byz_frac: float, dp_sigma: float,
+        seed: int = 0):
+    cfg = get_config(arch, reduced=reduced)
+    model = Model(cfg, remat=True)
+    params = model.init(jax.random.PRNGKey(seed))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    attack = "scale" if byz_frac > 0 else "none"
+    tcfg = TrainConfig(
+        n_machines=machines,
+        agg=GradAggConfig(method=method, dp_sigma=dp_sigma, attack=attack,
+                          attack_factor=-3.0))
+    n_byz = int(byz_frac * machines)
+    byz = (jnp.arange(machines) < n_byz) if n_byz else None
+    trainer = Trainer(model, AdamW(lr=1e-3), tcfg)
+    batches = synthetic_lm_batches(jax.random.PRNGKey(1), cfg, steps,
+                                   batch, seq)
+    losses = []
+    t0 = time.time()
+
+    def cb(i, m):
+        losses.append(float(m["loss"]))
+        if i % 20 == 0:
+            print(f"    step {i:4d} loss {losses[-1]:.4f} "
+                  f"({time.time()-t0:.0f}s)")
+
+    params, opt_state, _ = trainer.fit(params, batches,
+                                       jax.random.PRNGKey(2),
+                                       byz_mask=byz, callback=cb)
+    print(f"  [{method}{' +byz' if n_byz else ''}] {n_params/1e6:.0f}M "
+          f"params: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return params, opt_state, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--machines", type=int, default=8)
+    ap.add_argument("--byzantine", type=float, default=0.125)
+    ap.add_argument("--dp-sigma", type=float, default=1e-4)
+    ap.add_argument("--ckpt", default="checkpoints/robust_llm.npz")
+    args = ap.parse_args(argv)
+
+    print(f"=== robust LLM training: {args.arch} "
+          f"({'reduced' if args.small else 'full'}) ===")
+    print("-- clean mean baseline --")
+    run(args.arch, args.small, args.steps, args.batch, args.seq,
+        args.machines, "mean", 0.0, 0.0)
+    print(f"-- mean under {args.byzantine:.0%} Byzantine --")
+    run(args.arch, args.small, args.steps, args.batch, args.seq,
+        args.machines, "mean", args.byzantine, 0.0)
+    print(f"-- DCQ + DP under {args.byzantine:.0%} Byzantine (the paper) --")
+    params, opt_state, _ = run(args.arch, args.small, args.steps,
+                               args.batch, args.seq, args.machines, "dcq",
+                               args.byzantine, args.dp_sigma)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, opt_state, step=args.steps,
+                        meta={"arch": args.arch, "agg": "dcq"})
+        print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpointing (flat-path npz, atomic)."""
+from repro.checkpoint.checkpoint import save, restore
+
+__all__ = ["save", "restore"]

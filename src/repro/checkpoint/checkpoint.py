@@ -1,0 +1,71 @@
+"""Checkpointing: flat-path .npz snapshots with atomic rename.
+
+Saves params + optimizer state + step + config metadata. Paths are
+"a/b/c" joins of the pytree dict keys (list indices as numbers), so a
+checkpoint is restorable without pickling arbitrary objects.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        flat[path] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params: Any, opt_state: Any = None,
+         step: int = 0, meta: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v
+                        for k, v in _flatten(opt_state).items()})
+    payload["__step__"] = np.asarray(step)
+    payload["__meta__"] = np.frombuffer(
+        json.dumps(meta or {}).encode(), dtype=np.uint8)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+    os.replace(tmp, path)
+
+
+def restore(path: str, params_like: Any, opt_like: Any = None
+            ) -> Tuple[Any, Any, int, Dict]:
+    """Restore into the structure of templates (shape/dtype validated)."""
+    with np.load(path) as z:
+        step = int(z["__step__"])
+        meta = json.loads(bytes(z["__meta__"]).decode() or "{}")
+
+        def fill(template, prefix):
+            leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+            out = []
+            for kp, leaf in leaves:
+                p = prefix + "/".join(
+                    str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in kp)
+                arr = z[p]
+                if tuple(arr.shape) != tuple(leaf.shape):
+                    raise ValueError(
+                        f"shape mismatch at {p}: ckpt {arr.shape} vs "
+                        f"template {leaf.shape}")
+                out.append(jnp.asarray(arr, dtype=leaf.dtype))
+            return jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(template), out)
+
+        params = fill(params_like, "params/")
+        opt_state = fill(opt_like, "opt/") if opt_like is not None else None
+    return params, opt_state, step, meta

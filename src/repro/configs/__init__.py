@@ -1,0 +1,41 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the full assigned config;
+``get_config(arch_id, reduced=True)`` the CPU smoke variant.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, ProtocolConfig, ShapeConfig, SHAPES
+
+_ARCH_MODULES: Dict[str, str] = {
+    "mistral-large-123b":    "repro.configs.mistral_large_123b",
+    "musicgen-medium":       "repro.configs.musicgen_medium",
+    "zamba2-7b":             "repro.configs.zamba2_7b",
+    "qwen3-moe-30b-a3b":     "repro.configs.qwen3_moe_30b_a3b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "xlstm-125m":            "repro.configs.xlstm_125m",
+    "phi3.5-moe-42b-a6.6b":  "repro.configs.phi35_moe_42b_a66b",
+    "starcoder2-15b":        "repro.configs.starcoder2_15b",
+    "minitron-8b":           "repro.configs.minitron_8b",
+    "glm4-9b":               "repro.configs.glm4_9b",
+}
+
+ARCHS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {ARCHS}")
+    cfg: ModelConfig = importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = ["ModelConfig", "ProtocolConfig", "ShapeConfig", "SHAPES",
+           "ARCHS", "get_config", "get_shape"]

@@ -1,0 +1,92 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Shared by the multi-pod dry-run (launch/dryrun.py), the roofline analysis
+and the smoke tests (which call it with concrete=True on reduced configs).
+No device allocation happens here — decode caches come from
+``jax.eval_shape`` over ``Model.init_cache``.
+
+The modality carve-out: audio gives EnCodec codebook token streams; vlm
+gives precomputed vision-tower patch embeddings (stub frontend).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model, VISION_DIM
+
+N_PATCHES_SPEC = 576   # llava-next base-tile patches
+
+LONG_WINDOW = 4096     # sliding window used by non-SSM archs at 500k
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """long_500k needs sub-quadratic attention: dense/moe/vlm/audio archs
+    switch to the sliding-window variant; ssm/hybrid run natively (hybrid's
+    shared attention also windows)."""
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        if cfg.sliding_window == 0:
+            return cfg.with_sliding_window(LONG_WINDOW)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Returns {name: ShapeDtypeStruct} for the step the shape exercises.
+
+    train/prefill: full-sequence batch; decode: one-token batch + cache.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            s_text = S - cfg.n_patches
+            batch["tokens"] = jax.ShapeDtypeStruct((B, s_text), tok)
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, VISION_DIM), jnp.bfloat16)
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, s_text), tok)
+        elif cfg.family == "audio":
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S, cfg.n_codebooks),
+                                                   tok)
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, S), tok)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), tok)
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, S), tok)
+        return batch
+
+    # decode: one new token against a cache of length S
+    cfg = adapt_config(cfg, shape)
+    model = Model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    if cfg.family == "audio":
+        tokens = jax.ShapeDtypeStruct((B, 1, cfg.n_codebooks), tok)
+    else:
+        tokens = jax.ShapeDtypeStruct((B, 1), tok)
+    # the cache is "at position S-1" in the dry-run; pos is part of cache
+    return {"tokens": tokens, "cache": cache}
+
+
+def concrete_batch(key: jax.Array, cfg: ModelConfig, shape: ShapeConfig
+                   ) -> Dict[str, jnp.ndarray]:
+    """Materialised random batch matching input_specs (smoke tests)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, spec in specs.items():
+        if name == "cache":
+            out[name] = Model(adapt_config(cfg, shape)).init_cache(
+                shape.global_batch, shape.seq_len)
+            continue
+        key, sub = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, spec.shape, 0, cfg.vocab,
+                                           dtype=jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape, spec.dtype)
+    return out

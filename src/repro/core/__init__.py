@@ -1,0 +1,10 @@
+"""The paper's contribution: DCQ aggregation + DP quasi-Newton protocol."""
+from repro.core.dcq import dcq, dcq_with_sigma, d_k, are_dcq, ARE_MEDIAN
+from repro.core.robust_agg import aggregate
+from repro.core.protocol import DPQNProtocol, ProtocolResult
+from repro.core.losses import get_problem, PROBLEMS
+from repro.core import dp, bfgs, byzantine, local, baselines
+
+__all__ = ["dcq", "dcq_with_sigma", "d_k", "are_dcq", "ARE_MEDIAN",
+           "aggregate", "DPQNProtocol", "ProtocolResult", "get_problem",
+           "PROBLEMS", "dp", "bfgs", "byzantine", "local", "baselines"]

@@ -1,0 +1,127 @@
+"""Comparison strategies the paper argues against (§1.2(1), §6):
+
+  * ``newton_estimator``      — distributed one-step Newton (Huang & Huo
+    2019 style): every machine transmits its FULL p x p Hessian + gradient.
+    Under DP each of the p^2 entries needs noise, so the per-round privacy
+    cost is ~p x that of a vector round — the paper's key budget argument.
+  * ``gd_estimator``          — multi-round distributed gradient descent
+    (Jordan et al. 2019 style): T rounds of one p-vector each; the privacy
+    budget grows linearly in T.
+
+Both support the same robust aggregation + Byzantine attack interface so
+benchmarks/comm_cost.py and mrse_vs_eps.py can compare like-for-like.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ProtocolConfig
+from repro.core import byzantine as byz
+from repro.core import dp, local
+from repro.core.losses import MEstimationProblem
+from repro.core.robust_agg import aggregate
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    theta: jnp.ndarray
+    accountant: dp.PrivacyAccountant
+    bytes_per_machine: int  # transmitted payload (fp32) for comm comparison
+
+
+def newton_estimator(problem: MEstimationProblem, cfg: ProtocolConfig,
+                     key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
+                     byz_mask: Optional[jnp.ndarray] = None,
+                     attack: str = "scale", attack_factor: float = -3.0,
+                     theta0: Optional[jnp.ndarray] = None) -> BaselineResult:
+    """One-step Newton with full-Hessian transmission (2 rounds: theta, then
+    grad+Hessian). DP noise on the Hessian is calibrated for a p^2-dim
+    query: sensitivity grows by sqrt(p) vs a vector (same per-entry tails),
+    which is exactly the budget blow-up the paper criticises."""
+    m1, n, p = X.shape
+    eps_r, delta_r = cfg.eps / 2, cfg.delta / 2
+    acct = dp.PrivacyAccountant()
+    if byz_mask is None:
+        byz_mask = jnp.zeros((m1,), bool)
+    else:
+        byz_mask = jnp.concatenate([jnp.zeros((1,), bool), byz_mask])
+    keys = jax.random.split(key, 6)
+    if theta0 is None:
+        theta0 = jnp.zeros((p,), X.dtype)
+
+    # Round 1: local estimators (same as protocol R1, median init)
+    theta_local = jax.vmap(lambda Xi, yi: local.newton_solve(
+        problem, theta0, Xi, yi, steps=cfg.newton_steps))(X, y)
+    # lambda_s = None means "calibrate locally" in the protocol; the baseline
+    # uses the median local-Hessian eigenvalue as its single constant.
+    if cfg.lambda_s is None:
+        lam = float(jnp.median(jax.vmap(lambda Xi, yi, ti: jnp.clip(
+            jnp.linalg.eigvalsh(problem.hessian(ti, Xi, yi))[0],
+            1e-3, None))(X, y, theta_local)))
+    else:
+        lam = cfg.lambda_s
+    s1 = dp.s1_theta(p, n, cfg.gammas[0], eps_r, delta_r, lam, cfg.tail)
+    theta_dp = theta_local if cfg.noiseless else dp.add_noise(keys[0], theta_local, s1)
+    theta_dp = byz.apply_attack(theta_dp, byz_mask, attack, attack_factor, keys[1])
+    acct.spend("R1 theta", eps_r, delta_r, s1)
+    theta_init = jnp.median(theta_dp, axis=0)
+
+    # Round 2: gradient (p) + full Hessian (p^2) transmission
+    grads = jax.vmap(lambda Xi, yi: problem.grad(theta_init, Xi, yi))(X, y)
+    hesss = jax.vmap(lambda Xi, yi: problem.hessian(theta_init, Xi, yi))(X, y)
+    s2g = dp.s2_grad(p, n, cfg.gammas[1], eps_r / 2, delta_r / 2, cfg.tail)
+    # Hessian = p^2-dimensional query: Lemma 4.4 sensitivity scales sqrt(dim)
+    s2h = dp.s2_grad(p * p, n, cfg.gammas[1], eps_r / 2, delta_r / 2, cfg.tail)
+    if not cfg.noiseless:
+        grads = dp.add_noise(keys[2], grads, s2g)
+        hesss = dp.add_noise(keys[3], hesss, s2h)
+    grads = byz.apply_attack(grads, byz_mask, attack, attack_factor, keys[4])
+    hesss = byz.apply_attack(hesss, byz_mask, attack, attack_factor, keys[5])
+    acct.spend("R2 grad", eps_r / 2, delta_r / 2, s2g)
+    acct.spend("R2 hessian", eps_r / 2, delta_r / 2, s2h)
+
+    g_agg = aggregate(grads, method="median", axis=0)
+    h_agg = aggregate(hesss, method="median", axis=0)
+    # symmetrise + ridge for invertibility under heavy DP noise
+    h_agg = 0.5 * (h_agg + h_agg.T) + 1e-6 * jnp.eye(p, dtype=X.dtype)
+    # guard: project onto PD cone (noise can flip eigenvalues when p large)
+    evals, evecs = jnp.linalg.eigh(h_agg)
+    evals = jnp.maximum(evals, 1e-3)
+    h_pd = (evecs * evals) @ evecs.T
+    theta = theta_init - jnp.linalg.solve(h_pd, g_agg)
+    return BaselineResult(theta=theta, accountant=acct,
+                          bytes_per_machine=4 * (p + p + p * p))
+
+
+def gd_estimator(problem: MEstimationProblem, cfg: ProtocolConfig,
+                 key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
+                 rounds: int = 20, lr: float = 1.0,
+                 byz_mask: Optional[jnp.ndarray] = None,
+                 attack: str = "scale", attack_factor: float = -3.0,
+                 theta0: Optional[jnp.ndarray] = None) -> BaselineResult:
+    """T-round distributed GD; budget eps/T per round so total matches."""
+    m1, n, p = X.shape
+    eps_r, delta_r = cfg.eps / rounds, cfg.delta / rounds
+    acct = dp.PrivacyAccountant()
+    if byz_mask is None:
+        byz_mask = jnp.zeros((m1,), bool)
+    else:
+        byz_mask = jnp.concatenate([jnp.zeros((1,), bool), byz_mask])
+    theta = jnp.zeros((p,), X.dtype) if theta0 is None else theta0
+    s2 = dp.s2_grad(p, n, cfg.gammas[1], eps_r, delta_r, cfg.tail)
+    keys = jax.random.split(key, 2 * rounds)
+    for t in range(rounds):
+        grads = jax.vmap(lambda Xi, yi: problem.grad(theta, Xi, yi))(X, y)
+        if not cfg.noiseless:
+            grads = dp.add_noise(keys[2 * t], grads, s2)
+        grads = byz.apply_attack(grads, byz_mask, attack, attack_factor,
+                                 keys[2 * t + 1])
+        g = aggregate(grads, method="median", axis=0)
+        theta = theta - lr * g
+        acct.spend(f"GD round {t}", eps_r, delta_r, s2)
+    return BaselineResult(theta=theta, accountant=acct,
+                          bytes_per_machine=4 * p * rounds)

@@ -1,0 +1,117 @@
+"""BFGS machinery (paper §4.1 and eq. 4.13) + L-BFGS two-loop.
+
+The protocol's second iteration updates every machine's inverse Hessian by
+
+    H^+ = V^T H V + rho * s s^T,      V = I - rho * y s^T,
+    rho = 1 / (s^T y),   s = theta_os - theta_cq,   y = g_diff,
+
+and only ever needs matrix-vector products with V — we exploit the rank-1
+structure (``VOp``) so the center never materialises a p x p matrix
+(DESIGN.md hardware-adaptation note).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VOp:
+    """V = I - rho * y s^T applied in O(p)."""
+    s: jnp.ndarray
+    y: jnp.ndarray
+    rho: jnp.ndarray
+
+    def __call__(self, x: jnp.ndarray, transpose: bool = False) -> jnp.ndarray:
+        if transpose:   # V^T x = x - rho * s (y . x)
+            return x - self.rho * self.s * jnp.dot(self.y, x)
+        return x - self.rho * self.y * jnp.dot(self.s, x)
+
+
+def make_v(s: jnp.ndarray, y: jnp.ndarray) -> VOp:
+    rho = 1.0 / jnp.dot(s, y)
+    return VOp(s=s, y=y, rho=rho)
+
+
+def bfgs_inverse_update(h_inv: jnp.ndarray, s: jnp.ndarray,
+                        y: jnp.ndarray) -> jnp.ndarray:
+    """Dense BFGS inverse update (eq. 4.13), used on the p x p convex head."""
+    v = make_v(s, y)
+    rho = v.rho
+    # V^T H V computed with two rank-1 applications: cost O(p^2)
+    hv = h_inv - jnp.outer(h_inv @ v.y, v.s) * rho          # H V
+    vthv = hv - jnp.outer(v.s, v.y @ hv) * rho              # V^T (H V)
+    return vthv + rho * jnp.outer(s, s)
+
+
+def bfgs_dir_product(h_inv_apply: Callable[[jnp.ndarray], jnp.ndarray],
+                     v: VOp, g: jnp.ndarray,
+                     rho_term: bool = True) -> jnp.ndarray:
+    """h = V^T H^{-1} V g (+ rho s s^T g): the machine-side product in (4.15)
+    plus the center-side rank-1 term. ``h_inv_apply`` is any linear operator
+    (dense solve for the convex head, L-BFGS two-loop at NN scale)."""
+    out = v(g, transpose=False)
+    out = h_inv_apply(out)
+    out = v(out, transpose=True)
+    if rho_term:
+        out = out + v.rho * v.s * jnp.dot(v.s, g)
+    return out
+
+
+# ------------------------------------------------------------- L-BFGS
+
+@dataclasses.dataclass
+class LBFGSMemory:
+    """Fixed-size (s, y) history for two-loop products at NN scale."""
+    s_hist: jnp.ndarray      # (hist, p)
+    y_hist: jnp.ndarray      # (hist, p)
+    count: jnp.ndarray       # scalar int
+
+    @staticmethod
+    def init(hist: int, p: int, dtype=jnp.float32) -> "LBFGSMemory":
+        return LBFGSMemory(jnp.zeros((hist, p), dtype),
+                           jnp.zeros((hist, p), dtype),
+                           jnp.zeros((), jnp.int32))
+
+    def push(self, s: jnp.ndarray, y: jnp.ndarray) -> "LBFGSMemory":
+        s_hist = jnp.roll(self.s_hist, -1, axis=0).at[-1].set(s)
+        y_hist = jnp.roll(self.y_hist, -1, axis=0).at[-1].set(y)
+        return LBFGSMemory(s_hist, y_hist, self.count + 1)
+
+
+jax.tree_util.register_pytree_node(
+    LBFGSMemory,
+    lambda mem: ((mem.s_hist, mem.y_hist, mem.count), None),
+    lambda _, kids: LBFGSMemory(*kids),
+)
+
+
+def lbfgs_two_loop(mem: LBFGSMemory, g: jnp.ndarray,
+                   gamma: float = 1.0) -> jnp.ndarray:
+    """Standard two-loop recursion; empty slots are masked out."""
+    hist = mem.s_hist.shape[0]
+    valid = jnp.arange(hist) >= jnp.maximum(hist - mem.count, 0)
+
+    def bwd(carry, inp):
+        q = carry
+        s, y, ok = inp
+        rho = jnp.where(ok, 1.0 / jnp.maximum(jnp.dot(s, y), 1e-12), 0.0)
+        a = rho * jnp.dot(s, q)
+        return q - jnp.where(ok, a, 0.0) * y, a
+
+    q, alphas = jax.lax.scan(bwd, g, (mem.s_hist, mem.y_hist, valid),
+                             reverse=True)
+    r = gamma * q
+
+    def fwd(carry, inp):
+        r = carry
+        s, y, ok, a = inp
+        rho = jnp.where(ok, 1.0 / jnp.maximum(jnp.dot(s, y), 1e-12), 0.0)
+        b = rho * jnp.dot(y, r)
+        return r + jnp.where(ok, a - b, 0.0) * s, None
+
+    r, _ = jax.lax.scan(fwd, r, (mem.s_hist, mem.y_hist, valid, alphas))
+    return r

@@ -1,0 +1,207 @@
+"""Differential privacy: Gaussian mechanism with tail-bound sensitivity.
+
+Implements the paper's DP layer (§2.2, §4.2):
+  * Lemma 2.1   — classic Gaussian mechanism sigma >= sqrt(2 log(1.25/delta)) * Delta / eps.
+  * Lemmas 4.3/4.4 — high-probability sensitivity of a mean of sub-Gaussian /
+    sub-exponential vectors (the paper's replacement for boundedness).
+  * Theorems 4.4/4.5 — noise s.d. s_1..s_5 for the five protocol rounds
+    (sub-exponential; Remark 4.4 / Lemma 39 give the sqrt(log n) sub-Gaussian
+    discount).
+  * Theorem 4.6 — DP for transmitted *variances* (untrusted-center mode).
+  * Corollary 4.1 — Kairouz–Oh–Viswanath advanced composition.
+  * PrivacyAccountant — tracks the five transmissions and the total budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- mechanism
+
+def gaussian_sigma(sensitivity: float, eps: float, delta: float) -> float:
+    """Lemma 2.1: noise s.d. for (eps, delta)-DP given l2-sensitivity."""
+    if eps <= 0 or not (0 < delta < 1):
+        raise ValueError("need eps > 0 and 0 < delta < 1")
+    return math.sqrt(2.0 * math.log(1.25 / delta)) * sensitivity / eps
+
+
+def noise_multiplier(eps: float, delta: float) -> float:
+    """The paper's Delta := sqrt(2 log(1/delta)) / eps (Thms 4.4/4.5)."""
+    return math.sqrt(2.0 * math.log(1.0 / delta)) / eps
+
+
+def add_noise(key: jax.Array, x: jnp.ndarray, s: float) -> jnp.ndarray:
+    """Gaussian mechanism G(X, s) = M(X) + N(0, s^2 I)."""
+    return x + s * jax.random.normal(key, x.shape, x.dtype)
+
+
+# ------------------------------------------------- tail-bound sensitivities
+
+def mean_sensitivity_subgauss(p: int, n: int, gamma: float) -> float:
+    """Lemma 4.3: Delta = 2*gamma*sqrt(p log n)/n for sub-Gaussian means."""
+    return 2.0 * gamma * math.sqrt(p * math.log(n)) / n
+
+
+def mean_sensitivity_subexp(p: int, n: int, gamma: float) -> float:
+    """Lemma 4.4: Delta = 2*gamma*sqrt(p)*log(n)/n for sub-exponential means."""
+    return 2.0 * gamma * math.sqrt(p) * math.log(n) / n
+
+
+def mean_dp_failure_prob_subgauss(p: int, n: int, gamma: float,
+                                  nu: float) -> float:
+    """Lemma 4.3: DP fails with prob <= 2 p n^{-gamma^2/nu^2}."""
+    return min(1.0, 2.0 * p * n ** (-(gamma ** 2) / nu ** 2))
+
+
+def mean_dp_failure_prob_subexp(p: int, n: int, gamma: float, nu: float,
+                                alpha: float) -> float:
+    """Lemma 4.4: 2 p max{n^{-gamma^2 log n/nu^2}, n^{-gamma/alpha}}."""
+    a = n ** (-(gamma ** 2) * math.log(n) / nu ** 2)
+    b = n ** (-gamma / alpha)
+    return min(1.0, 2.0 * p * max(a, b))
+
+
+def variance_sensitivity(n: int, gamma: float) -> float:
+    """Thm 4.6: Delta = (4*gamma*log n + 1)/n for a sub-Gaussian sample
+    variance (untrusted-center variance transmission)."""
+    if gamma < 1:
+        raise ValueError("Thm 4.6 requires gamma >= 1")
+    return (4.0 * gamma * math.log(n) + 1.0) / n
+
+
+# ----------------------------------------------- protocol noise calibration
+
+def _tail_factor(n: int, tail: str) -> float:
+    """sub-exponential: log n; sub-Gaussian: sqrt(log n) (Remark 4.4)."""
+    if tail == "subexp":
+        return math.log(n)
+    if tail == "subgauss":
+        return math.sqrt(math.log(n))
+    raise ValueError(f"tail must be subexp|subgauss, got {tail!r}")
+
+
+def s1_theta(p: int, n: int, gamma: float, eps: float, delta: float,
+             lambda_s: float, tail: str = "subexp") -> float:
+    """Thm 4.5(1): s1 = 2.02 gamma sqrt(p) log(n) Delta / (lambda_s n)."""
+    d = noise_multiplier(eps, delta)
+    return 2.02 * gamma * math.sqrt(p) * _tail_factor(n, tail) * d / (lambda_s * n)
+
+
+def s2_grad(p: int, n: int, gamma: float, eps: float, delta: float,
+            tail: str = "subexp") -> float:
+    """Thm 4.5(2): s2 = 2 gamma sqrt(p) log(n) Delta / n."""
+    d = noise_multiplier(eps, delta)
+    return 2.0 * gamma * math.sqrt(p) * _tail_factor(n, tail) * d / n
+
+
+def s3_newton_dir(p: int, n: int, gamma: float, eps: float, delta: float,
+                  lambda_s: float, dir_norm: float,
+                  tail: str = "subexp") -> float:
+    """Thm 4.5(3): s3j = 2.02 gamma sqrt(p) log(n) ||H_j^{-1} g_cq|| Delta / (lambda_s n)."""
+    d = noise_multiplier(eps, delta)
+    return (2.02 * gamma * math.sqrt(p) * _tail_factor(n, tail)
+            * dir_norm * d / (lambda_s * n))
+
+
+def s4_grad_diff(p: int, n: int, gamma: float, eps: float, delta: float,
+                 step_norm: float, tail: str = "subexp") -> float:
+    """Thm 4.5(4): s4 = 2 gamma sqrt(p) log(n) ||theta_os - theta_cq|| Delta / n."""
+    d = noise_multiplier(eps, delta)
+    return 2.0 * gamma * math.sqrt(p) * _tail_factor(n, tail) * step_norm * d / n
+
+
+def s5_bfgs_dir(p: int, n: int, gamma: float, eps: float, delta: float,
+                vh_norm: float, dir_norm: float,
+                tail: str = "subexp") -> float:
+    """Thm 4.5(5): s5j = 2.02 gamma sqrt(p) log(n) ||V H_j^{-1}|| ||H_j^{-1} V g_os|| Delta / n."""
+    d = noise_multiplier(eps, delta)
+    return (2.02 * gamma * math.sqrt(p) * _tail_factor(n, tail)
+            * vh_norm * dir_norm * d / n)
+
+
+def s6_variance(p: int, n: int, gamma: float, eps: float,
+                delta: float) -> float:
+    """§4.3: s6 = sqrt(2) gamma p (4 log n + 1) sqrt(log(1.25 p/delta)) / (n eps)."""
+    return (math.sqrt(2.0) * gamma * p * (4.0 * math.log(n) + 1.0)
+            * math.sqrt(math.log(1.25 * p / delta)) / (n * eps))
+
+
+# ---------------------------------------------------------------- composition
+
+def compose_basic(budgets: List[Tuple[float, float]]) -> Tuple[float, float]:
+    """Dwork et al. 2006: k queries compose to (sum eps_i, sum delta_i)."""
+    return sum(e for e, _ in budgets), sum(d for _, d in budgets)
+
+
+def compose_advanced(eps: float, delta: float, k: int,
+                     slack: float) -> Tuple[float, float]:
+    """Cor 4.1 (Kairouz–Oh–Viswanath Thm 3.2): k-fold adaptive composition
+    of (eps, delta)-DP mechanisms is (eps_tilde, 1-(1-delta)^k (1-slack))-DP.
+    """
+    a = k * eps
+    common = (math.e ** eps - 1.0) * k * eps / (math.e ** eps + 1.0)
+    b = common + eps * math.sqrt(
+        2.0 * k * math.log(math.e + math.sqrt(k * eps ** 2) / slack))
+    c = common + eps * math.sqrt(2.0 * k * math.log(1.0 / slack))
+    eps_tilde = min(a, b, c)
+    delta_total = 1.0 - (1.0 - delta) ** k * (1.0 - slack)
+    return eps_tilde, delta_total
+
+
+# ---------------------------------------------------------------- accountant
+
+@dataclasses.dataclass
+class QueryRecord:
+    name: str
+    eps: float
+    delta: float
+    sigma: float
+    failure_prob: float = 0.0
+
+
+class PrivacyAccountant:
+    """Tracks the per-round budgets of Algorithm 1 and reports totals.
+
+    Basic composition (Remark 4.5) plus the tighter Cor 4.1 bound when all
+    rounds share (eps, delta).
+    """
+
+    def __init__(self) -> None:
+        self.records: List[QueryRecord] = []
+
+    def spend(self, name: str, eps: float, delta: float, sigma: float,
+              failure_prob: float = 0.0) -> None:
+        self.records.append(QueryRecord(name, eps, delta, sigma, failure_prob))
+
+    def total_basic(self) -> Tuple[float, float]:
+        return compose_basic([(r.eps, r.delta) for r in self.records])
+
+    def total_advanced(self, slack: float = 1e-3) -> Tuple[float, float]:
+        if not self.records:
+            return 0.0, 0.0
+        eps0 = self.records[0].eps
+        delta0 = self.records[0].delta
+        if any(abs(r.eps - eps0) > 1e-12 or abs(r.delta - delta0) > 1e-12
+               for r in self.records):
+            # heterogeneous budgets: fall back to basic
+            return self.total_basic()
+        return compose_advanced(eps0, delta0, len(self.records), slack)
+
+    def total_failure_prob(self) -> float:
+        """Union bound over the high-probability sensitivity events."""
+        return min(1.0, sum(r.failure_prob for r in self.records))
+
+    def summary(self) -> str:
+        e_b, d_b = self.total_basic()
+        e_a, d_a = self.total_advanced()
+        lines = [f"{r.name}: (eps={r.eps:.4g}, delta={r.delta:.4g}) "
+                 f"sigma={r.sigma:.4g}" for r in self.records]
+        lines.append(f"basic composition:    ({e_b:.4g}, {d_b:.4g})")
+        lines.append(f"advanced composition: ({e_a:.4g}, {d_a:.4g})")
+        lines.append(f"sensitivity failure prob <= {self.total_failure_prob():.3g}")
+        return "\n".join(lines)

@@ -1,0 +1,144 @@
+"""Convex M-estimation losses (paper eq. 1.1; experiments §5).
+
+Each problem exposes mean loss / gradient / Hessian over a data shard plus
+the per-sample quantities needed by the protocol's variance estimators
+(Lemma 4.2, eqs. 4.10/4.16). Closed forms are used (autodiff agreement is
+asserted in tests/test_losses.py).
+
+Data convention: ``X`` is (n, p), ``y`` is (n,); theta is (p,).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _sigmoid(z):
+    return jax.nn.sigmoid(z)
+
+
+class MEstimationProblem:
+    name: str = "base"
+
+    # -- per-sample primitives -------------------------------------------
+    def point_loss(self, theta, x, y):
+        raise NotImplementedError
+
+    def point_grad(self, theta, x, y):
+        raise NotImplementedError
+
+    def point_hess_weight(self, theta, x, y):
+        """Scalar w(x, y, theta) with hess = w * x x^T (GLM structure)."""
+        raise NotImplementedError
+
+    # -- shard-level reductions ------------------------------------------
+    def loss(self, theta, X, y):
+        return jnp.mean(self.point_loss(theta, X, y))
+
+    def grad(self, theta, X, y):
+        """(p,) mean gradient nabla F_j(theta)."""
+        return jnp.mean(self.per_sample_grads(theta, X, y), axis=0)
+
+    def per_sample_grads(self, theta, X, y):
+        """(n, p) per-sample gradients nabla f(X_i, theta)."""
+        return self.point_grad(theta, X, y)
+
+    def hessian(self, theta, X, y):
+        """(p, p) mean Hessian nabla^2 F_j(theta)."""
+        w = self.point_hess_weight(theta, X, y)          # (n,)
+        return (X * w[:, None]).T @ X / X.shape[0]
+
+    def per_sample_hessians(self, theta, X, y):
+        """(n, p, p); only needed for the h^(1)/h^(3) variance estimates."""
+        w = self.point_hess_weight(theta, X, y)
+        return w[:, None, None] * (X[:, :, None] * X[:, None, :])
+
+    def grad_variance(self, theta, X, y):
+        """(p,) per-coordinate variance of nabla f_l(X_i, theta)."""
+        g = self.per_sample_grads(theta, X, y)
+        return jnp.var(g, axis=0)
+
+
+class LogisticRegression(MEstimationProblem):
+    """f(x, y; theta) = log(1+exp(x.theta)) - y x.theta  (Experiment 1)."""
+    name = "logistic"
+
+    def point_loss(self, theta, X, y):
+        z = X @ theta
+        return jax.nn.softplus(z) - y * z
+
+    def point_grad(self, theta, X, y):
+        z = X @ theta
+        return (_sigmoid(z) - y)[:, None] * X
+
+    def point_hess_weight(self, theta, X, y):
+        s = _sigmoid(X @ theta)
+        return s * (1.0 - s)
+
+
+class PoissonRegression(MEstimationProblem):
+    """f = exp(x.theta) - y x.theta  (Experiment 2)."""
+    name = "poisson"
+
+    def point_loss(self, theta, X, y):
+        z = X @ theta
+        return jnp.exp(z) - y * z
+
+    def point_grad(self, theta, X, y):
+        z = X @ theta
+        return (jnp.exp(z) - y)[:, None] * X
+
+    def point_hess_weight(self, theta, X, y):
+        return jnp.exp(X @ theta)
+
+
+class LinearRegression(MEstimationProblem):
+    """f = 0.5 (y - x.theta)^2."""
+    name = "linear"
+
+    def point_loss(self, theta, X, y):
+        r = y - X @ theta
+        return 0.5 * r * r
+
+    def point_grad(self, theta, X, y):
+        return -(y - X @ theta)[:, None] * X
+
+    def point_hess_weight(self, theta, X, y):
+        return jnp.ones_like(y)
+
+
+class HuberRegression(MEstimationProblem):
+    """Huber loss with threshold c (robust location-scale regression)."""
+    name = "huber"
+
+    def __init__(self, c: float = 1.345):
+        self.c = c
+
+    def point_loss(self, theta, X, y):
+        r = y - X @ theta
+        a = jnp.abs(r)
+        return jnp.where(a <= self.c, 0.5 * r * r,
+                         self.c * a - 0.5 * self.c ** 2)
+
+    def point_grad(self, theta, X, y):
+        r = y - X @ theta
+        psi = jnp.clip(r, -self.c, self.c)
+        return -psi[:, None] * X
+
+    def point_hess_weight(self, theta, X, y):
+        r = y - X @ theta
+        return (jnp.abs(r) <= self.c).astype(X.dtype)
+
+
+PROBLEMS: Dict[str, Callable[[], MEstimationProblem]] = {
+    "logistic": LogisticRegression,
+    "poisson": PoissonRegression,
+    "linear": LinearRegression,
+    "huber": HuberRegression,
+}
+
+
+def get_problem(name: str) -> MEstimationProblem:
+    return PROBLEMS[name]()

@@ -1,0 +1,254 @@
+"""Algorithm 1: robust distributed quasi-Newton estimation with DP (§4).
+
+Single-host reference implementation: machines are a leading axis, local
+computations are vmapped, "transmissions" are explicit arrays so Byzantine
+corruption and DP noise are applied exactly where the paper applies them
+(on the wire). The shard_map SPMD version (dist/sharded_protocol.py) reuses
+the same round functions and must agree bit-for-bit on the aggregates up to
+collective reduction order (tested in tests/test_dist.py).
+
+Round structure (five p-vector transmissions):
+  R1  theta_hat_j + b1          -> DCQ -> theta_cq            (4.2)/(4.4)
+  R2  grad_j(theta_cq) + b2     -> DCQ -> g_cq                (4.6)
+  R3  Hinv_j g_cq + b3          -> DCQ -> H1; theta_os        (4.7)/(4.8)
+  R4  grad-diff + b4            -> DCQ -> gdiff_cq, g_os      (4.12)
+  R5  V^T Hinv_j V g_os + b5    -> DCQ -> H2; theta_qn        (4.15)
+
+Indexing note: the paper takes the median over machines [m]_0 but sums the
+CQ correction over node machines [m] only; we aggregate uniformly over all
+m+1 transmitted values (an O(1/m) difference, recorded in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ProtocolConfig
+from repro.core import byzantine as byz
+from repro.core import dp, local
+from repro.core.bfgs import VOp, make_v
+from repro.core.losses import MEstimationProblem
+from repro.core.robust_agg import aggregate
+
+
+@dataclasses.dataclass
+class ProtocolResult:
+    theta_cq: jnp.ndarray          # initial DCQ estimator (4.4)
+    theta_os: jnp.ndarray          # one-stage estimator (4.8)
+    theta_qn: jnp.ndarray          # final quasi-Newton estimator
+    accountant: dp.PrivacyAccountant
+    noise_sd: Dict[str, float]
+    v_op: Optional[VOp] = None
+
+
+class DPQNProtocol:
+    """Paper Algorithm 1. ``run`` consumes pre-sharded data:
+    X: (m+1, n, p), y: (m+1, n); machine 0 is the central processor."""
+
+    def __init__(self, problem: MEstimationProblem, cfg: ProtocolConfig):
+        self.problem = problem
+        self.cfg = cfg
+
+    # -- noise helpers -----------------------------------------------------
+    def _round_budget(self):
+        c = self.cfg
+        return c.eps / c.n_rounds, c.delta / c.n_rounds
+
+    def _noise(self, key, x, s):
+        if self.cfg.noiseless:
+            return x
+        return dp.add_noise(key, x, jnp.asarray(s, x.dtype))
+
+    # -- the five rounds ----------------------------------------------------
+    def run(self, key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
+            byz_mask: Optional[jnp.ndarray] = None,
+            attack: str = "scale", attack_factor: float = -3.0,
+            theta0: Optional[jnp.ndarray] = None,
+            theta_cq_override: Optional[jnp.ndarray] = None) -> ProtocolResult:
+        cfg = self.cfg
+        prob = self.problem
+        m_plus_1, n, p = X.shape
+        m = m_plus_1 - 1
+        eps_r, delta_r = self._round_budget()
+        acct = dp.PrivacyAccountant()
+        if byz_mask is None:
+            byz_mask = jnp.zeros((m_plus_1,), bool)
+        else:
+            # center (machine 0) is honest in trusted mode
+            byz_mask = jnp.concatenate([jnp.zeros((1,), bool), byz_mask])
+        keys = jax.random.split(key, 16)
+        if theta0 is None:
+            theta0 = jnp.zeros((p,), X.dtype)
+
+        def corrupt(vals, kk):
+            return byz.apply_attack(vals, byz_mask, attack=attack,
+                                    factor=attack_factor, key=kk)
+
+        Xc, yc = X[0], y[0]  # center's own shard
+
+        # ---- Round 1: local M-estimators -> theta_cq ----------------------
+        theta_local = jax.vmap(
+            lambda Xi, yi: local.newton_solve(prob, theta0, Xi, yi,
+                                              steps=cfg.newton_steps))(X, y)
+        # lambda_s (Assumption 7.3): fixed constant, or calibrated by EACH
+        # machine from its local Hessian spectrum (local data only => no
+        # extra transmission, no extra privacy cost). The center uses its
+        # own lambda_0 when reconstructing the noise variance.
+        if cfg.lambda_s is None:
+            lam_j = jax.vmap(lambda Xi, yi, ti: jnp.clip(jnp.linalg.eigvalsh(
+                prob.hessian(ti, Xi, yi))[0], 1e-3, None))(X, y, theta_local)
+        else:
+            lam_j = jnp.full((m_plus_1,), cfg.lambda_s, X.dtype)
+        s1_base = dp.s1_theta(p, n, cfg.gammas[0], eps_r, delta_r,
+                              1.0, cfg.tail)
+        s1_j = s1_base / lam_j                         # per-machine sd
+        s1 = float(jnp.median(s1_j))                   # reported/summary value
+        theta_dp = theta_local if cfg.noiseless else (
+            theta_local + s1_j[:, None]
+            * jax.random.normal(keys[0], theta_local.shape, X.dtype))
+        theta_dp = corrupt(theta_dp, keys[1])
+        acct.spend("R1 theta", eps_r, delta_r, s1,
+                   dp.mean_dp_failure_prob_subexp(p, n, cfg.gammas[0], 1.0, 1.0))
+
+        theta_med = jnp.median(theta_dp, axis=0)
+        if cfg.center_trust == "trusted":
+            sig2 = local.sandwich_diag_variance(prob, theta_med, Xc, yc)
+        else:
+            # untrusted center: median aggregation, no variance needed here
+            sig2 = jnp.ones((p,), X.dtype)
+        s1_eff = 0.0 if cfg.noiseless else s1_j[0]     # center's estimate
+        scale1 = jnp.sqrt((sig2 + n * s1_eff ** 2)) / jnp.sqrt(n)
+        agg1 = "median" if cfg.center_trust == "untrusted" else cfg.aggregator
+        theta_cq = aggregate(theta_dp, method=agg1, scale=scale1, K=cfg.K,
+                             trim_beta=cfg.trim_beta, axis=0)
+        if theta_cq_override is not None:
+            # warm start / ablation hook: continue the protocol from a
+            # caller-supplied initial estimate.
+            theta_cq = theta_cq_override
+
+        # ---- Round 2: gradients at theta_cq -> g_cq -----------------------
+        grads = jax.vmap(lambda Xi, yi: prob.grad(theta_cq, Xi, yi))(X, y)
+        s2 = dp.s2_grad(p, n, cfg.gammas[1], eps_r, delta_r, cfg.tail)
+        grads_dp = self._noise(keys[2], grads, s2)
+        grads_dp = corrupt(grads_dp, keys[3])
+        acct.spend("R2 grad", eps_r, delta_r, s2,
+                   dp.mean_dp_failure_prob_subexp(p, n, cfg.gammas[1], 1.0, 1.0))
+
+        s2_eff = 0.0 if cfg.noiseless else s2
+        if cfg.center_trust == "trusted":
+            gvar = local.grad_coordinate_variance(prob, theta_cq, Xc, yc)
+        else:
+            # §4.3: node machines transmit DP variances; center medians them.
+            s6 = dp.s6_variance(p, n, 1.0, eps_r, delta_r)
+            node_gvar = jax.vmap(
+                lambda Xi, yi: prob.grad_variance(theta_cq, Xi, yi))(X[1:], y[1:])
+            node_gvar = self._noise(keys[4], node_gvar, s6)
+            node_gvar = byz.apply_attack(node_gvar, byz_mask[1:],
+                                         attack=attack, factor=attack_factor,
+                                         key=keys[5])
+            gvar = jnp.median(node_gvar, axis=0)
+            acct.spend("R2b var", eps_r, delta_r, s6, 0.0)
+        scale2 = jnp.sqrt(jnp.maximum(gvar, 1e-12) + n * s2_eff ** 2) / jnp.sqrt(n)
+        g_cq = _agg_for(cfg, "grad", grads_dp, scale2)
+
+        # ---- Round 3: Newton directions -> theta_os -----------------------
+        def newton_dir(Xi, yi):
+            h = prob.hessian(theta_cq, Xi, yi) + 1e-9 * jnp.eye(p, dtype=X.dtype)
+            return jnp.linalg.solve(h, g_cq)
+        dirs = jax.vmap(newton_dir)(X, y)
+        dir_norm = jnp.linalg.norm(dirs, axis=1)          # per machine (Thm 4.5(3))
+        s3 = (0.0 if cfg.noiseless else
+              dp.s3_newton_dir(p, n, cfg.gammas[2], eps_r, delta_r,
+                               1.0, 1.0, cfg.tail))
+        s3_j = (s3 / lam_j) * dir_norm                     # per-machine sd
+        dirs_dp = dirs if cfg.noiseless else (
+            dirs + s3_j[:, None] * jax.random.normal(keys[6], dirs.shape, X.dtype))
+        dirs_dp = corrupt(dirs_dp, keys[7])
+        acct.spend("R3 newton-dir", eps_r, delta_r, float(s3), 0.0)
+
+        if cfg.center_trust == "trusted":
+            hvar = local.newton_dir_variance(prob, theta_cq, Xc, yc, g_cq)
+        else:
+            hvar = jnp.maximum(jnp.median(
+                (dirs_dp - jnp.median(dirs_dp, 0)) ** 2, 0) * n, 1e-12)
+        s3_0 = (s3 / lam_j[0]) * jnp.linalg.norm(dirs[0])
+        scale3 = jnp.sqrt(jnp.maximum(hvar, 1e-12) + n * s3_0 ** 2) / jnp.sqrt(n)
+        H1 = _agg_for(cfg, "dir", dirs_dp, scale3)
+        theta_os = theta_cq - H1
+
+        # ---- Round 4: gradient differences -> gdiff_cq, g_os --------------
+        gdiff = jax.vmap(lambda Xi, yi: prob.grad(theta_os, Xi, yi)
+                         - prob.grad(theta_cq, Xi, yi))(X, y)
+        step = theta_os - theta_cq
+        s4 = (0.0 if cfg.noiseless else
+              dp.s4_grad_diff(p, n, cfg.gammas[3], eps_r, delta_r, 1.0,
+                              cfg.tail))
+        s4_eff = s4 * jnp.linalg.norm(step)
+        gdiff_dp = gdiff if cfg.noiseless else (
+            gdiff + s4_eff * jax.random.normal(keys[8], gdiff.shape, X.dtype))
+        gdiff_dp = corrupt(gdiff_dp, keys[9])
+        acct.spend("R4 grad-diff", eps_r, delta_r, float(s4), 0.0)
+
+        if cfg.center_trust == "trusted":
+            gd = prob.per_sample_grads(theta_os, Xc, yc) \
+                - prob.per_sample_grads(theta_cq, Xc, yc)
+            gdvar = jnp.var(gd, axis=0)
+            gosvar = local.grad_coordinate_variance(prob, theta_os, Xc, yc)
+        else:
+            gdvar = jnp.maximum(jnp.median(
+                (gdiff_dp - jnp.median(gdiff_dp, 0)) ** 2, 0) * n, 1e-12)
+            gosvar = gvar
+        scale4 = jnp.sqrt(jnp.maximum(gdvar, 1e-12)
+                          + n * s4_eff ** 2) / jnp.sqrt(n)
+        gdiff_cq = _agg_for(cfg, "gdiff", gdiff_dp, scale4)
+        scale4b = jnp.sqrt(jnp.maximum(gosvar, 1e-12) + n * s2_eff ** 2
+                           + n * s4_eff ** 2) / jnp.sqrt(n)
+        g_os = _agg_for(cfg, "g_os", grads_dp + gdiff_dp, scale4b)
+
+        # ---- Round 5: BFGS directions -> theta_qn --------------------------
+        v = make_v(s=step, y=gdiff_cq)
+
+        def bfgs_dir(Xi, yi):
+            h = prob.hessian(theta_cq, Xi, yi) + 1e-9 * jnp.eye(p, dtype=X.dtype)
+            hinv_vg = jnp.linalg.solve(h, v(g_os, transpose=False))
+            return v(hinv_vg, transpose=True)              # (4.15) machine part
+        h3 = jax.vmap(bfgs_dir)(X, y)
+        s5 = (0.0 if cfg.noiseless else
+              dp.s5_bfgs_dir(p, n, cfg.gammas[4], eps_r, delta_r, 1.0, 1.0,
+                             cfg.tail))
+        s5_j = s5 * jnp.linalg.norm(h3, axis=1)
+        h3_dp = h3 if cfg.noiseless else (
+            h3 + s5_j[:, None] * jax.random.normal(keys[10], h3.shape, X.dtype))
+        h3_dp = corrupt(h3_dp, keys[11])
+        acct.spend("R5 bfgs-dir", eps_r, delta_r, float(s5), 0.0)
+
+        if cfg.center_trust == "trusted":
+            h3var = local.bfgs_dir_variance(prob, theta_cq, Xc, yc, v, g_os)
+        else:
+            h3var = jnp.maximum(jnp.median(
+                (h3_dp - jnp.median(h3_dp, 0)) ** 2, 0) * n, 1e-12)
+        s5_0 = s5 * jnp.linalg.norm(h3[0])
+        scale5 = jnp.sqrt(jnp.maximum(h3var, 1e-12) + n * s5_0 ** 2) / jnp.sqrt(n)
+        h3_agg = _agg_for(cfg, "h3", h3_dp, scale5)
+        # center-side rank-1 term: rho (s s^T) g_os  (below eq. 4.15)
+        H2 = h3_agg + v.rho * step * jnp.dot(step, g_os)
+        theta_qn = theta_os - H2
+
+        return ProtocolResult(
+            theta_cq=theta_cq, theta_os=theta_os, theta_qn=theta_qn,
+            accountant=acct,
+            noise_sd={"s1": float(s1), "s2": float(s2), "s3": float(s3),
+                      "s4": float(s4), "s5": float(s5)},
+            v_op=v)
+
+
+def _agg_for(cfg: ProtocolConfig, name: str, values, scale):
+    """Untrusted-center mode uses the median everywhere except the gradient
+    round (paper §4.3 keeps DCQ for 'crucial statistics such as gradients')."""
+    if cfg.center_trust == "untrusted" and name not in ("grad",):
+        return aggregate(values, method="median", axis=0)
+    return aggregate(values, method=cfg.aggregator, scale=scale, K=cfg.K,
+                     trim_beta=cfg.trim_beta, axis=0)

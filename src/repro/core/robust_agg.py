@@ -1,0 +1,71 @@
+"""Robust aggregation baselines the paper compares against (§1.1).
+
+Coordinate-wise median (Yin et al. 2018), trimmed mean (Yin et al. 2018/19),
+geometric median (Chen et al. 2017), and the non-robust mean. All operate
+over a leading machine axis and are usable both in the convex protocol and
+as gradient aggregators for training (dist/grad_agg.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dcq import dcq
+
+
+def mean_agg(values, axis: int = 0):
+    return jnp.mean(values, axis=axis)
+
+
+def median_agg(values, axis: int = 0):
+    return jnp.median(values, axis=axis)
+
+
+def trimmed_mean_agg(values, beta: float = 0.2, axis: int = 0):
+    """Coordinate-wise beta-trimmed mean: drop the floor(beta*m) smallest and
+    largest entries per coordinate. Paper: beta >= 2*alpha_n; ARE = 1-beta."""
+    values = jnp.moveaxis(values, axis, 0)
+    m = values.shape[0]
+    g = int(jnp.floor(beta * m / 2)) if isinstance(m, int) else 0
+    g = max(int(beta * m / 2), 0)
+    srt = jnp.sort(values, axis=0)
+    if 2 * g >= m:
+        raise ValueError(f"trim fraction {beta} too large for m={m}")
+    kept = srt[g:m - g]
+    return kept.mean(axis=0)
+
+
+def geometric_median_agg(values, axis: int = 0, iters: int = 50,
+                         eps: float = 1e-8):
+    """Weiszfeld iteration for the geometric median of m vectors."""
+    values = jnp.moveaxis(values, axis, 0)          # (m, ...)
+    m = values.shape[0]
+    flat = values.reshape(m, -1)
+
+    def step(z, _):
+        d = jnp.linalg.norm(flat - z[None], axis=1)
+        w = 1.0 / jnp.maximum(d, eps)
+        z_new = (w[:, None] * flat).sum(0) / w.sum()
+        return z_new, None
+
+    z0 = jnp.median(flat, axis=0)
+    z, _ = jax.lax.scan(step, z0, None, length=iters)
+    return z.reshape(values.shape[1:])
+
+
+def aggregate(values, method: str = "dcq", scale=None, K: int = 10,
+              trim_beta: float = 0.2, axis: int = 0):
+    """Dispatch table used by the protocol and the gradient aggregator."""
+    if method == "mean":
+        return mean_agg(values, axis=axis)
+    if method == "median":
+        return median_agg(values, axis=axis)
+    if method == "trimmed":
+        return trimmed_mean_agg(values, beta=trim_beta, axis=axis)
+    if method == "geomedian":
+        return geometric_median_agg(values, axis=axis)
+    if method == "dcq":
+        if scale is None:
+            raise ValueError("DCQ needs a per-coordinate scale")
+        return dcq(values, scale, K=K, axis=axis)
+    raise ValueError(f"unknown aggregator {method!r}")

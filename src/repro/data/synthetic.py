@@ -1,0 +1,119 @@
+"""Synthetic data generation (paper §5.1) and the token pipeline for the
+architecture smoke tests / LLM training examples.
+
+Regression designs follow the paper exactly:
+  * X ~ N(0, Sigma_T), Sigma_T Toeplitz with entry rho^{|i-j|}, rho = 0.6;
+  * theta* = p^{-1/2} (1/2, ..., 1/2);
+  * logistic: Y ~ Bernoulli(sigmoid(X theta*));
+  * Poisson:  X resampled until |X theta*| <= 1, Y ~ Poisson(exp(X theta*)).
+
+``make_shards`` lays data out as (m+1, n, ...) with machine 0 the center.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def toeplitz_cov(p: int, rho: float = 0.6) -> jnp.ndarray:
+    idx = jnp.arange(p)
+    return rho ** jnp.abs(idx[:, None] - idx[None, :])
+
+
+def target_theta(p: int) -> jnp.ndarray:
+    return jnp.full((p,), 0.5) / jnp.sqrt(p)
+
+
+def sample_x(key: jax.Array, n: int, p: int, rho: float = 0.6) -> jnp.ndarray:
+    cov = toeplitz_cov(p, rho)
+    chol = jnp.linalg.cholesky(cov)
+    z = jax.random.normal(key, (n, p))
+    return z @ chol.T
+
+
+def logistic_data(key: jax.Array, n: int, p: int,
+                  rho: float = 0.6) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    kx, ky = jax.random.split(key)
+    X = sample_x(kx, n, p, rho)
+    theta = target_theta(p)
+    prob = jax.nn.sigmoid(X @ theta)
+    y = jax.random.bernoulli(ky, prob).astype(jnp.float32)
+    return X, y
+
+
+def poisson_data(key: jax.Array, n: int, p: int,
+                 rho: float = 0.6) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Truncated design: resample rows until |x.theta*| <= 1 (paper Exp 2).
+    Implemented by oversampling 3x and taking the first n valid rows (>90%
+    of draws are valid per the paper, so 3x is far more than enough)."""
+    kx, ky = jax.random.split(key)
+    theta = target_theta(p)
+    X_big = sample_x(kx, 3 * n, p, rho)
+    valid = jnp.abs(X_big @ theta) <= 1.0
+    order = jnp.argsort(~valid)          # valid rows first, stable
+    X = X_big[order][:n]
+    lam = jnp.exp(X @ theta)
+    y = jax.random.poisson(ky, lam).astype(jnp.float32)
+    return X, y
+
+
+def linear_data(key: jax.Array, n: int, p: int, rho: float = 0.6,
+                noise: float = 1.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    kx, ke = jax.random.split(key)
+    X = sample_x(kx, n, p, rho)
+    y = X @ target_theta(p) + noise * jax.random.normal(ke, (n,))
+    return X, y
+
+
+_GENERATORS = {"logistic": logistic_data, "poisson": poisson_data,
+               "linear": linear_data}
+
+
+def make_shards(key: jax.Array, model: str, m: int, n: int, p: int,
+                rho: float = 0.6) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(m+1, n, p) X and (m+1, n) y; machine 0 is the central processor."""
+    gen = _GENERATORS[model]
+    keys = jax.random.split(key, m + 1)
+    X, y = jax.vmap(lambda k: gen(k, n, p, rho))(keys)
+    return X, y
+
+
+# ------------------------------------------------------------- LM pipeline
+
+def token_batches(seed: int, vocab: int, batch: int, seq: int,
+                  n_batches: int):
+    """Deterministic synthetic token stream with a learnable structure:
+    next token = (3*tok + 7) % vocab with 10% uniform noise, so a model can
+    visibly reduce loss within a few hundred steps."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_batches):
+        start = rng.integers(0, vocab, size=(batch, 1))
+        toks = [start]
+        for _ in range(seq):
+            nxt = (3 * toks[-1] + 7) % vocab
+            noise = rng.integers(0, vocab, size=nxt.shape)
+            mask = rng.random(nxt.shape) < 0.1
+            toks.append(np.where(mask, noise, nxt))
+        arr = np.concatenate(toks, axis=1)
+        yield jnp.asarray(arr[:, :seq]), jnp.asarray(arr[:, 1:seq + 1])
+
+
+def digits_like_dataset(seed: int, n: int, n_features: int = 50,
+                        pair: Tuple[int, int] = (8, 9)):
+    """Deterministic stand-in for the MNIST pairs experiment (§5.2): two
+    Gaussian classes whose means differ on a sparse subset of features, with
+    heavier overlap for 'hard' pairs — no network access in this container,
+    so the real MNIST cannot be fetched (DESIGN.md §2)."""
+    rng = np.random.default_rng(seed + 100 * pair[0] + pair[1])
+    hard = {(8, 9): 1.6, (6, 8): 1.2, (6, 9): 1.0}.get(tuple(sorted(pair)), 1.2)
+    mean_gap = 1.0 / hard
+    k_informative = 8
+    mu = np.zeros(n_features)
+    informative = rng.choice(n_features, size=k_informative, replace=False)
+    mu[informative] = mean_gap * rng.choice([-1.0, 1.0], size=k_informative)
+    y = rng.integers(0, 2, size=n)
+    X = rng.normal(size=(n, n_features)) + np.outer(2 * y - 1, mu)
+    return jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32), informative

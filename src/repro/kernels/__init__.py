@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the two compute hot-spots:
+  dcq         — coordinate-wise DCQ robust aggregation (VPU bisection)
+  gqa_decode  — GQA flash-decode, one token vs long KV cache
+Each has ops.py (platform dispatch) and *_ref.py (pure-jnp oracle).
+"""
+from repro.kernels import ops
+
+__all__ = ["ops"]

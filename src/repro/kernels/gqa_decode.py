@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: GQA flash-decode — one query token vs a long KV cache.
+
+Serving hot-spot (decode_32k: 128 seqs x 32k cache; long_500k via the ring
+buffer). Memory-bound: the whole cache streams HBM -> VMEM once; the
+kernel's job is to keep that stream dense and avoid materialising
+(Hq, S) scores in HBM.
+
+Tiling: grid = (B, Hkv, S/TS). Each program loads a (TS, Dh) K tile and V
+tile for one kv head, computes (g, TS) scores for the head's g query
+groups on the MXU, and maintains the online-softmax running (max, sum,
+acc) in VMEM scratch across the sequential S-grid dimension (TPU grids
+iterate the last axis innermost, so scratch carries state between tiles).
+The final tile normalises and writes (g, Dh).
+
+cache_len masks ring-buffer slots that are not yet written; softmax is
+permutation-invariant so ring order needs no unwinding.
+
+Validated in interpret mode against gqa_decode_ref.py over a
+shape/dtype/length sweep (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, ts: int, n_tiles: int):
+    t = pl.program_id(2)
+    b = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (g, Dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)        # (TS, Dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)        # (TS, Dh)
+    dh = q.shape[-1]
+    scale = 1.0 / (dh ** 0.5)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # mask positions beyond the valid cache length
+    pos = t * ts + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (g, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                         # (g, TS)
+    corr = jnp.exp(m_prev - m_new)                 # (g, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == n_tiles - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ts", "interpret"))
+def gqa_decode_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      cache_len: jnp.ndarray, ts: int = 512,
+                      interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, Dh); k/v: (B, S, Hkv, Dh); cache_len: (B,) int32.
+
+    Returns (B, Hq, Dh). ``ts`` is the KV tile length (S padded to a
+    multiple; padded slots are masked by cache_len semantics).
+    """
+    B, Hq, Dh = q.shape
+    _, S, Hkv, _ = k.shape
+    g = Hq // Hkv
+    ts = min(ts, S)
+    pad = (-S) % ts
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = k.shape[1]
+    n_tiles = Sp // ts
+    qg = q.reshape(B, Hkv, g, Dh)
+
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, Dh), lambda b, h, t, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, ts, 1, Dh), lambda b, h, t, *_: (b, t, h, 0)),
+            pl.BlockSpec((1, ts, 1, Dh), lambda b, h, t, *_: (b, t, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, Dh),
+                               lambda b, h, t, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, Dh), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, ts=ts, n_tiles=n_tiles),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, Dh), q.dtype),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, Hq, Dh)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the GQA flash-decode kernel: one query token per
+sequence against a long KV cache (the serving hot-spot for decode_32k /
+long_500k)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gqa_decode_reference(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         cache_len: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, Hq, Dh); k/v: (B, S, Hkv, Dh); cache_len: (B,) valid lengths.
+
+    Returns (B, Hq, Dh) fp32-accumulated attention output.
+    """
+    B, Hq, Dh = q.shape
+    _, S, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = 1.0 / (Dh ** 0.5)
+    qg = q.reshape(B, Hkv, g, Dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None] < cache_len[:, None]          # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Dh)

@@ -1,0 +1,36 @@
+"""Jitted public wrappers for the Pallas kernels with platform dispatch.
+
+On TPU the compiled kernels run natively (interpret=False); on CPU (this
+container) they execute in interpret mode, or fall back to the jnp oracle
+when ``prefer="jnp"`` — the oracle IS the model's default path, the
+kernels are the TPU hot-spot implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dcq as dcq_kernel
+from repro.kernels import dcq_ref, gqa_decode, gqa_decode_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def dcq_aggregate(values: jnp.ndarray, K: int = 10,
+                  prefer: str = "pallas") -> jnp.ndarray:
+    """Robust DCQ aggregation of (m, p) -> (p,) with MAD scale."""
+    if prefer == "jnp":
+        return dcq_ref.dcq_mad_reference(values, K=K)
+    return dcq_kernel.dcq_pallas(values, K=K, interpret=not _on_tpu())
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     cache_len: jnp.ndarray,
+                     prefer: str = "pallas") -> jnp.ndarray:
+    """GQA flash-decode: q (B, Hq, Dh) vs cache (B, S, Hkv, Dh)."""
+    if prefer == "jnp":
+        return gqa_decode_ref.gqa_decode_reference(q, k, v, cache_len)
+    return gqa_decode.gqa_decode_pallas(q, k, v, cache_len,
+                                        interpret=not _on_tpu())

@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init). Everything else follows.
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")  # quiet SPMD warnings
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes, record memory/cost/collective analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod
+  python -m repro.launch.dryrun ... --agg dcq --strategy sharded
+
+Outputs one JSON per combination under experiments/dryrun/.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.shapes import adapt_config, input_specs
+from repro.dist.grad_agg import GradAggConfig
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as shd
+from repro.models.model import Model
+from repro.train.optimizer import AdamW
+from repro.train.trainer import TrainConfig, make_train_step
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              agg: str = "dcq", strategy: str = "replicated",
+              fsdp: bool = False, donate: bool = True,
+              cfg_override=None, kv_mode: str = "auto",
+              grad_dtype: str = "", moe_cf: float = 0.0,
+              microbatch: int = 0, moe_shard: bool = False,
+              moe_dispatch: int = 0):
+    """Build + lower + compile one combination; returns (compiled, meta)."""
+    import dataclasses
+    shape = SHAPES[shape_name]
+    cfg = cfg_override if cfg_override is not None \
+        else adapt_config(get_config(arch), shape)
+    if cfg.moe is not None and (moe_cf or moe_shard or moe_dispatch):
+        moe_new = cfg.moe
+        if moe_cf:
+            moe_new = dataclasses.replace(moe_new, capacity_factor=moe_cf)
+        if moe_shard:
+            moe_new = dataclasses.replace(moe_new, shard_buffers=True)
+        if moe_dispatch:
+            moe_new = dataclasses.replace(moe_new,
+                                          dispatch_shards=moe_dispatch)
+        cfg = dataclasses.replace(cfg, moe=moe_new)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = Model(cfg, remat=True)
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    # robust aggregation uses the data axis as the machine axis => weights
+    # cannot be FSDP-sharded over it in robust mode unless requested.
+    pshard = shd.param_shardings(params_shapes, mesh, cfg, fsdp=fsdp)
+    specs = input_specs(cfg, shape)
+
+    with mesh:
+        if shape.kind == "train":
+            n_machines = chips // mesh.shape["model"]
+            tcfg = TrainConfig(
+                n_machines=n_machines, remat=True, fsdp=fsdp,
+                grad_dtype=grad_dtype, microbatch=microbatch,
+                agg=GradAggConfig(method=agg, dp_sigma=1e-5,
+                                  strategy=strategy))
+            opt = AdamW(lr=1e-4)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            opt_shard = type(opt_shapes)(
+                step=NamedSharding(mesh, P()),
+                mu=pshard, nu=pshard)
+            bshard = shd.batch_shardings(specs, mesh)
+            step_fn = make_train_step(model, opt, tcfg, mesh)
+            key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(pshard, opt_shard, bshard, None),
+                donate_argnums=(0, 1) if donate else (),
+            ).lower(params_shapes, opt_shapes, specs, key_spec)
+        elif shape.kind == "prefill":
+            bshard = shd.batch_shardings(specs, mesh)
+
+            def prefill(params, batch):
+                logits, _ = model.forward(params, batch)
+                # serving returns last-position logits only
+                return logits[:, -1]
+            lowered = jax.jit(
+                prefill, in_shardings=(pshard, bshard),
+            ).lower(params_shapes, specs)
+        else:  # decode
+            cache_spec = specs["cache"]
+            cshard = shd.cache_shardings(cache_spec, mesh, kv_mode=kv_mode)
+            tok_shard = shd.batch_shardings({"tokens": specs["tokens"]},
+                                            mesh)
+
+            def serve_step(params, cache, batch):
+                logits, cache = model.decode_step(params, cache, batch)
+                return jnp.argmax(logits[:, -1], axis=-1), cache
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(pshard, cshard, tok_shard),
+                donate_argnums=(1,) if donate else (),
+            ).lower(params_shapes, cache_spec,
+                    {"tokens": specs["tokens"]})
+        compiled = lowered.compile()
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": chips, "agg": agg, "strategy": strategy, "fsdp": fsdp,
+            "kind": shape.kind, "kv_mode": kv_mode,
+            "sliding_window": cfg.sliding_window}
+    return compiled, cfg, shape, meta
+
+
+def _probe_costs(arch, shape_name, multi_pod, agg, strategy, fsdp, cfg,
+                 kw=None):
+    """L=1 / L=2 probe compiles to correct scan-once cost analysis.
+
+    XLA's HloCostAnalysis counts a while-loop body once (verified
+    empirically), so probes trace in repro.models.modes.probe_mode:
+      * layer scans unrolled -> per-layer byte/collective increments;
+      * exact_chunks=True additionally collapses flash/mLSTM chunk scans
+        into one chunk (same algebraic FLOP count as the chunked
+        schedule) -> exact FLOP increments.
+    FLOPs are taken from the exact probes; bytes/collectives from the
+    chunked probes (= KV streamed once per layer, the fused-kernel ideal;
+    recorded in EXPERIMENTS.md §Roofline methodology).
+    The hybrid family gets extra probes (attn_every=0 vs 1) to price the
+    shared attention block separately from the cond's accounting.
+    """
+    import dataclasses
+    from repro.models import modes
+
+    def probe(n_layers, exact, attn_every=None):
+        c = dataclasses.replace(
+            cfg, n_layers=n_layers,
+            attn_every=(attn_every if attn_every is not None
+                        else cfg.attn_every),
+            slstm_at=())
+        with modes.probe_mode(unroll_layers=True, exact_chunks=exact):
+            comp, *_ = lower_one(arch, shape_name, multi_pod, agg,
+                                 strategy, fsdp, donate=False,
+                                 cfg_override=c, **(kw or {}))
+            return roofline.module_costs(comp)
+
+    every = 0 if cfg.family == "hybrid" else None
+    out = {}
+    for tag, exact in (("bytes", False), ("flops", True)):
+        c1 = probe(1, exact, attn_every=every)
+        c2 = probe(2, exact, attn_every=every)
+        out[tag] = {"c1": c1, "c2": c2}
+        if cfg.family == "hybrid":
+            out[tag]["c_attn"] = probe(1, exact, attn_every=1)
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+            agg: str, strategy: str, fsdp: bool, kv_mode: str = "auto",
+            grad_dtype: str = "", moe_cf: float = 0.0,
+            microbatch: int = 0, tag_extra: str = "",
+            moe_shard: bool = False, moe_dispatch: int = 0,
+            skip_probes: bool = False) -> dict:
+    t0 = time.time()
+    kw = dict(kv_mode=kv_mode, grad_dtype=grad_dtype, moe_cf=moe_cf,
+              microbatch=microbatch, moe_shard=moe_shard,
+              moe_dispatch=moe_dispatch)
+    compiled, cfg, shape, meta = lower_one(arch, shape_name, multi_pod,
+                                           agg, strategy, fsdp, **kw)
+    costs = None
+    if cfg.family != "ssm" and not skip_probes:
+        # xlstm python-loops layers: HLO is exact; skip_probes (multi-pod
+        # sweep) records raw scan-once costs — the roofline table is
+        # single-pod only
+        probes = _probe_costs(arch, shape_name, multi_pod, agg, strategy,
+                              fsdp, cfg, kw)
+        raw = roofline.module_costs(compiled)
+        cost_b = roofline.extrapolate_layers(
+            raw, probes["bytes"]["c1"], probes["bytes"]["c2"],
+            cfg.n_layers)
+        cost_f = roofline.extrapolate_layers(
+            raw, probes["flops"]["c1"], probes["flops"]["c2"],
+            cfg.n_layers)
+        costs = {"flops": cost_f["flops"], "bytes": cost_b["bytes"],
+                 "coll": cost_b["coll"], "corrected": True}
+        if cfg.family == "hybrid":
+            # add the shared-attn increment for its n_shared applications
+            n_shared = cfg.n_layers // cfg.attn_every
+            for tag, field in (("flops", "flops"), ("bytes", "bytes")):
+                ca = probes[tag]["c_attn"]
+                c1 = probes[tag]["c1"]
+                costs[field] += n_shared * max(ca[field] - c1[field], 0)
+            ca, c1 = probes["bytes"]["c_attn"], probes["bytes"]["c1"]
+            for op in costs["coll"]:
+                costs["coll"][op] += n_shared * max(
+                    ca["coll"].get(op, 0) - c1["coll"].get(op, 0), 0)
+        costs["coll"]["total"] = sum(
+            v for k, v in costs["coll"].items() if k != "total")
+    report = roofline.analyze(compiled, cfg, shape, meta["mesh"],
+                              meta["chips"], arch, costs=costs)
+    mem = compiled.memory_analysis()
+    meta.update(report.asdict())
+    meta["compile_s"] = time.time() - t0
+    meta["memory_analysis"] = {
+        "argument_size": getattr(mem, "argument_size_in_bytes", None),
+        "output_size": getattr(mem, "output_size_in_bytes", None),
+        "temp_size": getattr(mem, "temp_size_in_bytes", None),
+        "alias_size": getattr(mem, "alias_size_in_bytes", None),
+        "generated_code_size": getattr(mem, "generated_code_size_in_bytes",
+                                       None),
+    }
+    meta["variant"] = tag_extra
+    os.makedirs(outdir, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{meta['mesh']}_{agg}_{strategy}" \
+          + ("_fsdp" if fsdp else "") + tag_extra
+    with open(os.path.join(outdir, tag + ".json"), "w") as f:
+        json.dump(meta, f, indent=1, default=str)
+    print(f"[dryrun] {tag}: OK in {meta['compile_s']:.1f}s | "
+          f"dominant={meta['dominant']} compute={meta['compute_s']:.4g}s "
+          f"memory={meta['memory_s']:.4g}s "
+          f"collective={meta['collective_s']:.4g}s | "
+          f"peak_mem={meta['peak_memory_bytes']}")
+    return meta
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--agg", default="dcq",
+                    choices=["mean", "median", "trimmed", "dcq"])
+    ap.add_argument("--strategy", default="replicated",
+                    choices=["replicated", "sharded"])
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--kv-mode", default="auto",
+                    choices=["auto", "seq", "replicate"])
+    ap.add_argument("--grad-dtype", default="")
+    ap.add_argument("--moe-cf", type=float, default=0.0)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--moe-shard", action="store_true")
+    ap.add_argument("--moe-dispatch", type=int, default=0)
+    ap.add_argument("--skip-probes", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape, mp, args.outdir, args.agg,
+                            args.strategy, args.fsdp, args.kv_mode,
+                            args.grad_dtype, args.moe_cf, args.microbatch,
+                            args.tag, args.moe_shard, args.moe_dispatch,
+                            args.skip_probes)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("all dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-partition module,
+so already per-device). Collective bytes are parsed from the
+post-optimisation HLO: we sum the *result-shape* bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(async "-start" forms counted once; "-done" skipped). Result-shape bytes
+are the payload a device receives — a consistent, implementation-honest
+proxy for wire bytes per device.
+
+MODEL_FLOPS (the "useful" 6ND / 2ND accounting) uses parameter counts from
+eval_shape, with MoE active-parameter correction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import mesh as meshmod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shapes appearing in an instruction's result, e.g. bf16[16,1024]{1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of collective ops in (post-opt) HLO text."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        rhs = rhs.strip()
+        # find which collective op this is (skip -done; count -start once)
+        opname = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start)?\(", rhs):
+                opname = c
+                break
+        if opname is None or f"{opname}-done(" in rhs:
+            continue
+        # result shapes live between '=' and the op name
+        head = rhs.split(opname)[0]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        out[opname] += nbytes
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def count_params(cfg: ModelConfig) -> Dict[str, int]:
+    """Total and active parameter counts (active: MoE uses top_k experts)."""
+    import math
+    from repro.models.model import Model
+    model = Model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    total = sum(math.prod(l.shape)
+                for l in jax.tree_util.tree_leaves(shapes))
+    active = total
+    if cfg.moe is not None:
+        per_expert = 3 * cfg.d_model * cfg.moe.d_ff_expert
+        inactive = (cfg.moe.n_experts - cfg.moe.top_k) * per_expert \
+            * cfg.n_layers
+        active = total - inactive
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference forward."""
+    n = count_params(cfg)["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    peak_memory_bytes: Optional[float] = None
+
+    def asdict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def module_costs(compiled) -> Dict[str, float]:
+    """flops / bytes / collective bytes of one compiled executable.
+
+    CAVEAT (handled by ``extrapolate_layers``): XLA's HloCostAnalysis
+    visits a while-loop body ONCE — a model that lax.scans its L layers
+    reports ~1 layer of FLOPs. The dry-run therefore compiles L=1 and L=2
+    probes and linearly extrapolates: cost(L) = c1 + (L-1) * (c2 - c1).
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):     # older API returned [dict]
+        cost = cost[0]
+    coll = parse_collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": dict(coll)}
+
+
+def extrapolate_layers(c_full: Dict, c1: Optional[Dict], c2: Optional[Dict],
+                       n_layers: int) -> Dict[str, float]:
+    """Correct scan-once costs: full-module HLO counts the scanned layer
+    body once; probes at L=1/L=2 give the per-layer increment."""
+    if c1 is None or c2 is None:
+        out = dict(c_full)
+        out["corrected"] = False
+        return out
+    out = {}
+    for k in ("flops", "bytes"):
+        d = max(c2[k] - c1[k], 0.0)
+        out[k] = c1[k] + (n_layers - 1) * d
+    coll = {}
+    for op in set(c_full["coll"]) | set(c1["coll"]):
+        d = max(c2["coll"].get(op, 0) - c1["coll"].get(op, 0), 0)
+        coll[op] = c1["coll"].get(op, 0) + (n_layers - 1) * d
+    out["coll"] = coll
+    out["corrected"] = True
+    return out
+
+
+def analyze(compiled, cfg: ModelConfig, shape: ShapeConfig,
+            mesh_name: str, chips: int, arch: str,
+            costs: Optional[Dict] = None) -> RooflineReport:
+    raw = module_costs(compiled)
+    c = costs if costs is not None else raw
+    flops = c["flops"]
+    nbytes = c["bytes"]
+    coll = c["coll"]
+    compute_s = flops / meshmod.PEAK_FLOPS_BF16
+    memory_s = nbytes / meshmod.HBM_BW
+    collective_s = coll["total"] / meshmod.ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops * chips, 1.0)
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(getattr(ma, "temp_size_in_bytes", 0)
+                     + getattr(ma, "argument_size_in_bytes", 0)
+                     + getattr(ma, "output_size_in_bytes", 0)
+                     - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=nbytes,
+        collective_bytes=coll, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant, model_flops=mf,
+        useful_ratio=useful, peak_memory_bytes=peak)

@@ -1,0 +1,88 @@
+"""Serving launcher: batched prefill + decode with a KV/state cache.
+
+CPU-scale demo on reduced configs (full configs lower via dryrun):
+
+  python -m repro.launch.serve --arch glm4-9b --batch 4 --prompt-len 32 \
+      --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import Model
+
+
+def prefill_into_cache(model: Model, params, tokens, cache):
+    """Feed a prompt token-by-token (functional reference prefill; the
+    chunked flash prefill produces the same logits — tested)."""
+    step = jax.jit(model.decode_step)
+    B, S = tokens.shape[:2]
+    logits = None
+    for t in range(S):
+        tok = tokens[:, t:t + 1]
+        if model.cfg.family == "audio":
+            tok = tokens[:, t:t + 1, :]
+        logits, cache = step(params, cache, {"tokens": tok})
+    return logits, cache
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B = args.batch
+    max_len = args.prompt_len + args.gen
+    cache = model.init_cache(B, max_len)
+
+    key = jax.random.PRNGKey(1)
+    if cfg.family == "audio":
+        prompt = jax.random.randint(key, (B, args.prompt_len,
+                                          cfg.n_codebooks), 0, cfg.vocab)
+    else:
+        prompt = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
+
+    t0 = time.time()
+    logits, cache = prefill_into_cache(model, params, prompt, cache)
+    t_prefill = time.time() - t0
+    print(f"[serve] {cfg.name}: prefill {args.prompt_len} tokens x{B} "
+          f"in {t_prefill:.2f}s")
+
+    step = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1], axis=-1)
+    generated = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        key, sub = jax.random.split(key)
+        t = tok[:, None]
+        if cfg.family == "audio":
+            t = jnp.tile(t[..., None], (1, 1, cfg.n_codebooks))
+        logits, cache = step(params, cache, {"tokens": t})
+        if args.temperature > 0:
+            tok = jax.random.categorical(sub,
+                                         logits[:, -1] / args.temperature)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)
+        generated.append(tok)
+    dt = time.time() - t0
+    toks = jnp.stack(generated, axis=1)
+    print(f"[serve] generated {args.gen} tokens x{B} in {dt:.2f}s "
+          f"({B*args.gen/max(dt,1e-9):.1f} tok/s); "
+          f"sample row 0: {toks[0][:16].tolist()}")
+    return toks
+
+
+if __name__ == "__main__":
+    main()

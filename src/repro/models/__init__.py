@@ -1,0 +1,6 @@
+"""Model zoo: one functional Model class covering all six families."""
+from repro.models.model import Model
+from repro.models import attention, blocks, flash, layers, moe, sharding, ssm, xlstm
+
+__all__ = ["Model", "attention", "blocks", "flash", "layers", "moe",
+           "sharding", "ssm", "xlstm"]

@@ -1,0 +1,90 @@
+"""GQA attention layer: init, forward (flash), decode (KV cache).
+
+Weights keep the fused (d_model, n_heads*d_head) layout so the model axis
+can shard the fused dim (always divisible by the mesh's model size for the
+assigned architectures; see models/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flash
+from repro.models.layers import _init, apply_rope
+
+Params = Dict[str, jnp.ndarray]
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "w_q": _init(k1, (d, hq * dh), dtype=dtype),
+        "w_k": _init(k2, (d, hkv * dh), dtype=dtype),
+        "w_v": _init(k3, (d, hkv * dh), dtype=dtype),
+        "w_o": _init(k4, (hq * dh, d), dtype=dtype),
+    }
+
+
+def _project_qkv(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                 cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S, _ = x.shape
+    dh = cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["w_q"]).reshape(B, S, cfg.n_heads, dh)
+    k = jnp.einsum("bsd,de->bse", x, p["w_k"]).reshape(B, S, cfg.n_kv_heads, dh)
+    v = jnp.einsum("bsd,de->bse", x, p["w_v"]).reshape(B, S, cfg.n_kv_heads, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                 window: int = 0) -> jnp.ndarray:
+    """Full-sequence causal attention (train / prefill). x: (B, S, d)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    out = flash.flash_attention(q, k, v, causal=True, window=window)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", out, p["w_o"])
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Params:
+    """KV cache for one layer. Sliding-window archs pass max_len=window
+    (ring buffer); full attention passes the sequence length."""
+    dh = cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, dh), dtype),
+    }
+
+
+def attn_decode(p: Params, x: jnp.ndarray, cache: Params,
+                pos: jnp.ndarray, cfg: ModelConfig,
+                window: int = 0) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode. x: (B, 1, d); pos: scalar int32 absolute position.
+
+    Returns (output (B, 1, d), updated cache). Ring-buffer indexing when
+    the cache is shorter than the absolute position (sliding window).
+    """
+    B = x.shape[0]
+    smax = cache["k"].shape[1]
+    positions = jnp.broadcast_to(pos[None], (B, 1))
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    slot = jnp.mod(pos, smax)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    cache_len = jnp.minimum(pos + 1, smax)
+    out = flash.decode_attention(
+        q, k_cache, v_cache, jnp.broadcast_to(cache_len, (B,)),
+        window=0)  # ring buffer already bounds the window
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return (jnp.einsum("bse,ed->bsd", out, p["w_o"]),
+            {"k": k_cache, "v": v_cache})

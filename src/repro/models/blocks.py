@@ -1,0 +1,143 @@
+"""Block wiring for every architecture family.
+
+Homogeneous stacks (dense / moe / ssm-mamba / hybrid backbone) carry a
+leading layer axis and are scanned (small HLO — essential for the 80-config
+dry-run). xLSTM's heterogeneous 12-layer stack is a Python loop.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, moe, ssm, xlstm
+from repro.models.layers import mlp_init, rms_norm, swiglu
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ------------------------------------------------------------ init helpers
+
+def dense_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attention.attn_init(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def moe_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attention.attn_init(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "moe": moe.moe_init(k2, cfg, dtype),
+    }
+
+
+def mamba_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    return {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "ssm": ssm.ssm_init(key, cfg, dtype),
+    }
+
+
+def shared_attn_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    """zamba2's shared-weight attention+MLP block (one weight set)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attention.attn_init(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def xlstm_block_init(key, cfg: ModelConfig, layer: int,
+                     dtype=jnp.float32) -> Params:
+    kind = "slstm" if layer in cfg.slstm_at else "mlstm"
+    init = xlstm.slstm_init if kind == "slstm" else xlstm.mlstm_init
+    return {"norm": jnp.ones((cfg.d_model,), dtype),
+            "mixer": init(key, cfg, dtype)}
+
+
+# ------------------------------------------------------------ forward
+
+def dense_block(p: Params, h: jnp.ndarray, cfg: ModelConfig,
+                window: int = 0) -> jnp.ndarray:
+    h = h + attention.attn_forward(p["attn"],
+                                   rms_norm(h, p["norm1"], cfg.norm_eps),
+                                   cfg, window=window)
+    x = rms_norm(h, p["norm2"], cfg.norm_eps)
+    return h + swiglu(x, **p["mlp"])
+
+
+def moe_block(p: Params, h: jnp.ndarray, cfg: ModelConfig,
+              window: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = h + attention.attn_forward(p["attn"],
+                                   rms_norm(h, p["norm1"], cfg.norm_eps),
+                                   cfg, window=window)
+    y, stats = moe.moe_ffn(p["moe"], rms_norm(h, p["norm2"], cfg.norm_eps),
+                           cfg)
+    return h + y, stats["aux_loss"]
+
+
+def mamba_block(p: Params, h: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return h + ssm.ssm_forward(p["ssm"], rms_norm(h, p["norm"], cfg.norm_eps),
+                               cfg)
+
+
+def shared_attn_block(p: Params, h: jnp.ndarray, cfg: ModelConfig,
+                      window: int = 0) -> jnp.ndarray:
+    h = h + attention.attn_forward(p["attn"],
+                                   rms_norm(h, p["norm1"], cfg.norm_eps),
+                                   cfg, window=window)
+    x = rms_norm(h, p["norm2"], cfg.norm_eps)
+    return h + swiglu(x, **p["mlp"])
+
+
+# ------------------------------------------------------------ decode
+
+def dense_block_decode(p: Params, h: jnp.ndarray, cache: Params,
+                       pos: jnp.ndarray, cfg: ModelConfig,
+                       window: int = 0) -> Tuple[jnp.ndarray, Params]:
+    a, cache = attention.attn_decode(p["attn"],
+                                     rms_norm(h, p["norm1"], cfg.norm_eps),
+                                     cache, pos, cfg, window=window)
+    h = h + a
+    x = rms_norm(h, p["norm2"], cfg.norm_eps)
+    return h + swiglu(x, **p["mlp"]), cache
+
+
+def moe_block_decode(p: Params, h: jnp.ndarray, cache: Params,
+                     pos: jnp.ndarray, cfg: ModelConfig,
+                     window: int = 0) -> Tuple[jnp.ndarray, Params]:
+    a, cache = attention.attn_decode(p["attn"],
+                                     rms_norm(h, p["norm1"], cfg.norm_eps),
+                                     cache, pos, cfg, window=window)
+    h = h + a
+    y, _ = moe.moe_ffn(p["moe"], rms_norm(h, p["norm2"], cfg.norm_eps), cfg)
+    return h + y, cache
+
+
+def mamba_block_decode(p: Params, h: jnp.ndarray, cache: Params,
+                       cfg: ModelConfig) -> Tuple[jnp.ndarray, Params]:
+    y, cache = ssm.ssm_decode(p["ssm"], rms_norm(h, p["norm"], cfg.norm_eps),
+                              cache, cfg)
+    return h + y, cache
+
+
+def shared_attn_block_decode(p: Params, h: jnp.ndarray, cache: Params,
+                             pos: jnp.ndarray, cfg: ModelConfig,
+                             window: int = 0) -> Tuple[jnp.ndarray, Params]:
+    a, cache = attention.attn_decode(p["attn"],
+                                     rms_norm(h, p["norm1"], cfg.norm_eps),
+                                     cache, pos, cfg, window=window)
+    h = h + a
+    x = rms_norm(h, p["norm2"], cfg.norm_eps)
+    return h + swiglu(x, **p["mlp"]), cache

@@ -1,0 +1,162 @@
+"""Chunked (flash-style) attention in pure JAX.
+
+Online-softmax attention with a double ``lax.scan`` over query and KV
+chunks so the (S x S) score matrix is never materialised — required for the
+32k-prefill and 4k-train shapes to lower with bounded live memory on every
+mesh. Supports GQA (kv heads broadcast over query-head groups), causal
+masking and sliding windows. A Pallas TPU kernel for the decode hot-spot
+lives in kernels/gqa_decode.py; this module is the jnp reference the model
+uses on CPU and the oracle the kernel is tested against.
+
+Shapes: q (B, S, Hq, Dh); k, v (B, T, Hkv, Dh). Output (B, S, Hq, Dh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk(x, size, axis):
+    n = x.shape[axis]
+    nchunks = n // size
+    shape = x.shape[:axis] + (nchunks, size) + x.shape[axis + 1:]
+    return x.reshape(shape)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, q_chunk: int = 512,
+                    kv_chunk: int = 512, scale: float | None = None
+                    ) -> jnp.ndarray:
+    """Online-softmax attention, O(q_chunk * kv_chunk) live scores.
+
+    Args:
+      q: (B, S, Hq, Dh); k/v: (B, T, Hkv, Dh) with Hq % Hkv == 0.
+      causal: apply causal mask (query position = q_offset + index).
+      window: if > 0, sliding-window attention — query i attends to
+        keys in (i - window, i].
+      q_offset: absolute position of q[0] relative to k[0] (prefill: 0;
+        decode-with-cache: cache length).
+      q_chunk/kv_chunk: scan tile sizes (auto-clamped to S/T).
+    """
+    from repro.models import modes
+    B, S, Hq, Dh = q.shape
+    _, T, Hkv, _ = k.shape
+    groups = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (Dh ** 0.5)
+    q_chunk = min(modes.chunk_override(q_chunk, S), S)
+    kv_chunk = min(modes.chunk_override(kv_chunk, T), T)
+    # pad to multiples (masked out below)
+    s_pad = (-S) % q_chunk
+    t_pad = (-T) % kv_chunk
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    Sp, Tp = q.shape[1], k.shape[1]
+    nq, nk = Sp // q_chunk, Tp // kv_chunk
+
+    # (nq, B, q_chunk, Hkv, groups, Dh)
+    qc = jnp.moveaxis(_chunk(q, q_chunk, 1), 1, 0)
+    qc = qc.reshape(nq, B, q_chunk, Hkv, groups, Dh)
+    kc = jnp.moveaxis(_chunk(k, kv_chunk, 1), 1, 0)   # (nk, B, c, Hkv, Dh)
+    vc = jnp.moveaxis(_chunk(v, kv_chunk, 1), 1, 0)
+
+    q_pos = q_offset + jnp.arange(Sp)
+    k_pos = jnp.arange(Tp)
+    kv_valid = k_pos < T
+
+    def q_step(_, qi):
+        q_i, qpos_i = qi          # (B, qc, Hkv, g, Dh), (qc,)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            k_j, v_j, kpos_j, valid_j = ki
+            # scores: (B, qc, Hkv, g, kc)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            mask = valid_j[None, :]
+            if causal:
+                mask = mask & (kpos_j[None, :] <= qpos_i[:, None])
+            if window > 0:
+                mask = mask & (kpos_j[None, :] > qpos_i[:, None] - window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v_j.dtype), v_j,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, q_chunk, Hkv, groups, Dh), jnp.float32)
+        m0 = jnp.full((B, q_chunk, Hkv, groups), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, Hkv, groups), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kc, vc, _chunk(k_pos, kv_chunk, 0), _chunk(kv_valid, kv_chunk, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None,
+                          (qc, _chunk(q_pos, q_chunk, 0)))
+    # (nq, B, qc, Hkv, g, Dh) -> (B, S, Hq, Dh)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sp, Hq, Dh)
+    return out[:, :S]
+
+
+def attention_reference(q, k, v, *, causal=True, window=0, q_offset=0,
+                        scale=None):
+    """Naive O(S*T) attention — oracle for tests (small shapes only)."""
+    B, S, Hq, Dh = q.shape
+    _, T, Hkv, _ = k.shape
+    groups = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (Dh ** 0.5)
+    kk = jnp.repeat(k, groups, axis=2)
+    vv = jnp.repeat(v, groups, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q, kk).astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p.astype(vv.dtype), vv)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray,
+                     *, window: int = 0, scale: float | None = None
+                     ) -> jnp.ndarray:
+    """One-token decode: q (B, 1, Hq, Dh) vs cache (B, Smax, Hkv, Dh).
+
+    ``cache_len`` is the number of valid entries. For ring-buffer
+    (sliding-window) caches all Smax slots are valid once wrapped; the
+    caller passes cache_len = min(pos+1, Smax) and positions are implicit
+    (softmax is permutation-invariant so ring order is irrelevant).
+    """
+    B, _, Hq, Dh = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    groups = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (Dh ** 0.5)
+    qg = q.reshape(B, Hkv, groups, Dh)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(Smax)[None] < cache_len[:, None]      # (B, Smax)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, Dh).astype(q.dtype)

@@ -1,0 +1,84 @@
+"""Shared neural building blocks (pure JAX, functional params-as-pytrees).
+
+Parameters live in nested dicts; homogeneous layer stacks carry a leading
+layer axis so the forward pass can ``lax.scan`` over layers (keeps the HLO
+small — essential for the 80-config dry-run on one CPU core, and standard
+practice at scale).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(shape[0])
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": _init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": _init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> jnp.ndarray:
+    return _init(key, (vocab, d_model), scale=0.02, dtype=dtype)
+
+
+def rope_frequencies(d_head: int, theta: float = 1e4) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., seq, heads, d_head); positions: (..., seq)."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)                   # (d_head/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    angles = angles[..., None, :]                             # (..., S, 1, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean CE over (batch, seq[, heads]) with optional validity mask."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def stack_layer_params(keys, init_fn) -> Params:
+    """Initialise L copies of a layer and stack each leaf on axis 0."""
+    per_layer = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_layer)

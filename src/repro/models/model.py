@@ -1,0 +1,286 @@
+"""Top-level model: embedding/frontends -> block stack -> LM head.
+
+One ``Model`` class covers all six architecture families via the config:
+
+  dense / vlm / audio : scanned dense blocks (vlm prepends patch embeds,
+                        audio sums codebook embeddings)
+  moe                 : scanned moe blocks (aux loss accumulated in scan)
+  hybrid (zamba2)     : scanned mamba blocks + ONE shared-weight attention
+                        block applied after every ``attn_every`` layers
+  ssm (xlstm)         : Python loop over heterogeneous mLSTM/sLSTM blocks
+
+API:
+  init(key) -> params
+  forward(params, batch) -> logits            (train / prefill path)
+  loss(params, batch) -> (scalar, aux dict)
+  init_cache(batch_size, max_len) -> cache
+  decode_step(params, cache, tokens) -> (logits, cache)   serve path
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, blocks, modes, ssm, xlstm
+from repro.models.layers import (cross_entropy, embed_init, rms_norm,
+                                 stack_layer_params, _init)
+
+Params = Dict[str, jnp.ndarray]
+
+VISION_DIM = 1024     # stub vision-tower output dim (projector maps to d)
+
+
+def _np_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, remat: bool = False):
+        self.cfg = cfg
+        self.remat = remat            # rematerialise each block in backward
+        self.dtype = _np_dtype(cfg)
+        if cfg.family == "hybrid" and cfg.attn_every > 0:
+            self.n_shared = cfg.n_layers // cfg.attn_every
+        else:
+            self.n_shared = 0
+
+    # ------------------------------------------------------------- init
+    def init(self, key: jax.Array) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        keys = jax.random.split(key, cfg.n_layers + 8)
+        p: Params = {"norm_f": jnp.ones((cfg.d_model,), dt)}
+
+        if cfg.family == "audio":
+            p["embed"] = jnp.stack([
+                embed_init(keys[-i - 1], cfg.vocab, cfg.d_model, dt)
+                for i in range(cfg.n_codebooks)])        # (nc, V, d)
+        else:
+            p["embed"] = embed_init(keys[-1], cfg.vocab, cfg.d_model, dt)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = _init(keys[-2], (cfg.d_model, cfg.vocab),
+                                 scale=0.02, dtype=dt)
+        if cfg.family == "vlm":
+            p["projector"] = _init(keys[-3], (VISION_DIM, cfg.d_model),
+                                   dtype=dt)
+
+        lk = keys[:cfg.n_layers]
+        if cfg.family in ("dense", "vlm", "audio"):
+            p["layers"] = stack_layer_params(
+                lk, lambda k: blocks.dense_block_init(k, cfg, dt))
+        elif cfg.family == "moe":
+            p["layers"] = stack_layer_params(
+                lk, lambda k: blocks.moe_block_init(k, cfg, dt))
+        elif cfg.family == "hybrid":
+            p["layers"] = stack_layer_params(
+                lk, lambda k: blocks.mamba_block_init(k, cfg, dt))
+            p["shared_attn"] = blocks.shared_attn_block_init(keys[-4], cfg, dt)
+        elif cfg.family == "ssm":     # xlstm
+            p["xlstm_layers"] = [
+                blocks.xlstm_block_init(lk[i], cfg, i, dt)
+                for i in range(cfg.n_layers)]
+        else:
+            raise ValueError(cfg.family)
+        return p
+
+    # ------------------------------------------------------------ embed
+    def _embed(self, p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "audio":
+            # tokens (B, S, n_codebooks): sum codebook embeddings
+            h = sum(p["embed"][c][tokens[..., c]]
+                    for c in range(cfg.n_codebooks))
+        else:
+            h = p["embed"][tokens]                        # (B, S, d)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            patches = jnp.einsum("bpv,vd->bpd",
+                                 batch["patch_embeds"].astype(h.dtype),
+                                 p["projector"])
+            h = jnp.concatenate([patches, h], axis=1)
+        return h
+
+    # ---------------------------------------------------------- forward
+    def forward(self, p: Params, batch: Dict[str, jnp.ndarray],
+                window: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (logits (B, S, V), aux_loss scalar)."""
+        cfg = self.cfg
+        win = cfg.sliding_window if window is None else window
+        h = self._embed(p, batch)
+        aux = jnp.zeros((), jnp.float32)
+        ckpt = jax.checkpoint if self.remat else (lambda f: f)
+
+        if cfg.family in ("dense", "vlm", "audio"):
+            @ckpt
+            def body(carry, lp):
+                return blocks.dense_block(lp, carry, cfg, window=win), None
+            h, _ = jax.lax.scan(body, h, p["layers"],
+                                unroll=modes.layer_unroll(cfg.n_layers))
+        elif cfg.family == "moe":
+            @ckpt
+            def body(carry, lp):
+                h, aux = carry
+                h, a = blocks.moe_block(lp, h, cfg, window=win)
+                return (h, aux + a), None
+            (h, aux), _ = jax.lax.scan(
+                body, (h, aux), p["layers"],
+                unroll=modes.layer_unroll(cfg.n_layers))
+        elif cfg.family == "hybrid":
+            shared = p.get("shared_attn")
+            every = cfg.attn_every
+
+            @ckpt
+            def body(carry, inp):
+                i, lp = inp
+                h = blocks.mamba_block(lp, carry, cfg)
+                if every > 0:      # attn_every=0: pure-mamba ablation/probe
+                    h = jax.lax.cond(
+                        (i % every) == every - 1,
+                        lambda hh: blocks.shared_attn_block(shared, hh, cfg,
+                                                            window=win),
+                        lambda hh: hh, h)
+                return h, None
+            idx = jnp.arange(cfg.n_layers)
+            h, _ = jax.lax.scan(body, h, (idx, p["layers"]),
+                                unroll=modes.layer_unroll(cfg.n_layers))
+        elif cfg.family == "ssm":
+            for i, lp in enumerate(p["xlstm_layers"]):
+                def one(hh, lp=lp, i=i):
+                    x = rms_norm(hh, lp["norm"], cfg.norm_eps)
+                    if i in cfg.slstm_at:
+                        return hh + xlstm.slstm_forward(lp["mixer"], x, cfg)
+                    return hh + xlstm.mlstm_forward(lp["mixer"], x, cfg)
+                h = ckpt(one)(h)
+        else:
+            raise ValueError(cfg.family)
+
+        h = rms_norm(h, p["norm_f"], cfg.norm_eps)
+        head = p["embed"].T if self.cfg.tie_embeddings else p["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", h, head)
+        return logits, aux
+
+    def loss(self, p: Params, batch: Dict[str, jnp.ndarray]
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = self.forward(p, batch)
+        labels = batch["labels"]
+        if self.cfg.family == "vlm" and "patch_embeds" in batch:
+            # patches carry no next-token target: score only text positions
+            n_patch = batch["patch_embeds"].shape[1]
+            logits = logits[:, n_patch:]
+        ce = cross_entropy(logits, labels, batch.get("mask"))
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------ cache
+    def init_cache(self, batch: int, max_len: int,
+                   dtype=None) -> Dict[str, jnp.ndarray]:
+        cfg = self.cfg
+        dt = dtype or self.dtype
+        win = cfg.sliding_window
+        attn_len = min(max_len, win) if win > 0 else max_len
+        cache: Dict[str, jnp.ndarray] = {"pos": jnp.zeros((), jnp.int32)}
+        L = cfg.n_layers
+
+        def stack(make, n):
+            one = make()
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one)
+
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            cache["attn"] = stack(
+                lambda: attention.attn_cache_init(cfg, batch, attn_len, dt), L)
+        elif cfg.family == "hybrid":
+            cache["ssm"] = stack(
+                lambda: ssm.ssm_cache_init(cfg, batch, jnp.float32), L)
+            if self.n_shared:
+                cache["attn"] = stack(
+                    lambda: attention.attn_cache_init(cfg, batch, attn_len,
+                                                      dt), self.n_shared)
+        elif cfg.family == "ssm":
+            cache["xlstm"] = [
+                (xlstm.slstm_cache_init(cfg, batch) if i in cfg.slstm_at
+                 else xlstm.mlstm_cache_init(cfg, batch))
+                for i in range(L)]
+        return cache
+
+    # ------------------------------------------------------- decode step
+    def decode_step(self, p: Params, cache: Dict[str, jnp.ndarray],
+                    batch: Dict[str, jnp.ndarray]
+                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """One-token step. batch["tokens"]: (B, 1) (audio: (B, 1, nc)).
+        Returns (logits (B, 1, V), updated cache)."""
+        cfg = self.cfg
+        win = cfg.sliding_window
+        pos = cache["pos"]
+        h = self._embed(p, {k: v for k, v in batch.items()
+                            if k != "patch_embeds"})
+        new_cache = dict(cache)
+
+        if cfg.family in ("dense", "vlm", "audio", "moe"):
+            dec = (blocks.moe_block_decode if cfg.family == "moe"
+                   else blocks.dense_block_decode)
+
+            def body(carry, inp):
+                lp, lc = inp
+                h2, lc2 = dec(lp, carry, lc, pos, cfg, window=win)
+                return h2, lc2
+            h, new_cache["attn"] = jax.lax.scan(
+                body, h, (p["layers"], cache["attn"]),
+                unroll=modes.layer_unroll(cfg.n_layers))
+        elif cfg.family == "hybrid":
+            shared = p.get("shared_attn")
+            every = cfg.attn_every
+            has_attn = self.n_shared > 0
+
+            def body(carry, inp):
+                h, attn_cache = carry
+                i, lp, lc = inp
+                h, lc2 = blocks.mamba_block_decode(lp, h, lc, cfg)
+
+                def with_attn(operand):
+                    h, ac = operand
+                    j = i // every
+                    one = jax.tree_util.tree_map(lambda a: a[j], ac)
+                    h2, one2 = blocks.shared_attn_block_decode(
+                        shared, h, one, pos, cfg, window=win)
+                    ac2 = jax.tree_util.tree_map(
+                        lambda a, b: jax.lax.dynamic_update_index_in_dim(
+                            a, b.astype(a.dtype), j, 0), ac, one2)
+                    return h2, ac2
+
+                if has_attn:
+                    h, attn_cache = jax.lax.cond(
+                        (i % every) == every - 1, with_attn,
+                        lambda op: op, (h, attn_cache))
+                return (h, attn_cache), lc2
+            idx = jnp.arange(cfg.n_layers)
+            attn0 = cache["attn"] if has_attn else jnp.zeros(())
+            (h, attn1), new_cache["ssm"] = jax.lax.scan(
+                body, (h, attn0), (idx, p["layers"], cache["ssm"]),
+                unroll=modes.layer_unroll(cfg.n_layers))
+            if has_attn:
+                new_cache["attn"] = attn1
+        elif cfg.family == "ssm":
+            caches = []
+            for i, (lp, lc) in enumerate(zip(p["xlstm_layers"],
+                                             cache["xlstm"])):
+                x = rms_norm(h, lp["norm"], cfg.norm_eps)
+                if i in cfg.slstm_at:
+                    y, lc2 = xlstm.slstm_decode(lp["mixer"], x, lc, cfg)
+                else:
+                    y, lc2 = xlstm.mlstm_decode(lp["mixer"], x, lc, cfg)
+                h = h + y
+                caches.append(lc2)
+            new_cache["xlstm"] = caches
+        else:
+            raise ValueError(cfg.family)
+
+        h = rms_norm(h, p["norm_f"], cfg.norm_eps)
+        head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", h, head)
+        new_cache["pos"] = pos + 1
+        return logits, new_cache

@@ -1,0 +1,42 @@
+"""Trace-time cost-probe modes for the dry-run roofline analysis.
+
+XLA's HloCostAnalysis visits each while-loop body ONCE, so a model that
+``lax.scan``s its layers (and flash-attention chunks) under-reports FLOPs
+and bytes. The dry-run therefore compiles small L=1/L=2 probe models with:
+
+  UNROLL_LAYERS — the layer scan is unrolled (bodies appear L times in
+    HLO): per-layer byte/collective increments become measurable.
+  EXACT_CHUNKS — flash attention / mLSTM process the sequence as ONE
+    chunk (algebraically the same FLOP count as the chunked schedule,
+    which computes every q x kv block pair): FLOP increments become exact.
+    (SSD needs no flag: its intra-chunk einsums are batched over chunks,
+    not scanned, so they are already fully counted.)
+
+Flags are trace-time globals set by context managers around
+``jit(...).lower()`` in launch/dryrun.py; production paths never set them.
+"""
+from __future__ import annotations
+
+import contextlib
+
+UNROLL_LAYERS = False
+EXACT_CHUNKS = False
+
+
+@contextlib.contextmanager
+def probe_mode(unroll_layers: bool = True, exact_chunks: bool = False):
+    global UNROLL_LAYERS, EXACT_CHUNKS
+    old = (UNROLL_LAYERS, EXACT_CHUNKS)
+    UNROLL_LAYERS, EXACT_CHUNKS = unroll_layers, exact_chunks
+    try:
+        yield
+    finally:
+        UNROLL_LAYERS, EXACT_CHUNKS = old
+
+
+def layer_unroll(n_layers: int) -> int:
+    return n_layers if UNROLL_LAYERS else 1
+
+
+def chunk_override(size: int, full: int) -> int:
+    return full if EXACT_CHUNKS else size

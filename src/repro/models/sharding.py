@@ -1,0 +1,204 @@
+"""Partitioning rules: param/batch/cache PartitionSpecs for any mesh.
+
+Scheme (Megatron-style, adapted per family):
+  * "model" axis shards: fused attention head dims (w_q/w_k/w_v out,
+    w_o in), MLP d_ff (w_gate/w_up out, w_down in), vocab (embed rows,
+    lm_head cols), MoE expert axis (expert parallelism), Mamba d_inner.
+  * "data" (x "pod") shards the batch / machine axis of activations,
+    gradients and KV caches.
+  * Norms, biases, router, small SSM scalars are replicated.
+
+Every rule is divisibility-checked against the actual mesh: if a dim does
+not divide, the rule falls back (next candidate dim or replication), so
+every (arch x shape x mesh) combination lowers. Fallbacks that fire on the
+production meshes are reported by ``explain_specs`` and recorded in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# key-name -> (dim candidates from the END of the shape, axis name)
+# dim index is negative (so rules are stack-agnostic: a leading layer axis
+# shifts positive indices but not negative ones).
+_LAST = object()   # marker: shard last dim
+_ROW = object()    # marker: shard dim -2 (input/row dim)
+
+_RULES: Dict[str, int] = {
+    # shard last dim on "model"
+    "w_q": -1, "w_k": -1, "w_v": -1, "w_gate": -1, "w_up": -1,
+    "w_in": -1, "w_x": -1, "w_if": -1, "lm_head": -1, "projector": -1,
+    "w_router": -1,
+    # shard row (input) dim on "model"
+    "w_o": -2, "w_down": -2, "w_out": -2,
+    # embedding: shard vocab rows
+    "embed": -2,
+}
+
+_REPLICATED = {"norm1", "norm2", "norm", "norm_f", "conv_w", "conv_b",
+               "a_log", "dt_bias", "d_skip", "b_if", "b", "r_h"}
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def _fits(shape: Tuple[int, ...], dim: int, mesh: Mesh, axis) -> bool:
+    try:
+        return shape[dim] % _axis_size(mesh, axis) == 0
+    except (IndexError, KeyError):
+        return False
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh, cfg: Optional[ModelConfig] = None,
+               fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf given its dict path.
+
+    ``fsdp=True`` additionally shards the largest remaining dim over the
+    "data" axis (ZeRO-3 style weight sharding; GSPMD inserts the per-layer
+    all-gathers). Only valid when the data axis is NOT being used as the
+    robust-aggregation machine axis.
+    """
+    name = path[-1]
+    ndim = len(shape)
+    spec = [None] * ndim
+    if name in _REPLICATED or ndim == 0:
+        return P(*spec)
+    # MoE expert tensors: (L?, E, d, f) — shard expert axis (dim -3)
+    if "moe" in path and name in ("w_gate", "w_up", "w_down"):
+        if _fits(shape, ndim - 3, mesh, "model"):
+            spec[ndim - 3] = "model"
+    elif name in _RULES:
+        dim = _RULES[name] % ndim
+        # audio stacked embed (nc, V, d): vocab is dim -2 still. OK.
+        if _fits(shape, dim, mesh, "model"):
+            spec[dim] = "model"
+    if fsdp and "data" in mesh.shape:
+        # largest unsharded dim divisible by the data axis
+        for dim in sorted(range(ndim), key=lambda i: -shape[i]):
+            if spec[dim] is None and _fits(shape, dim, mesh, "data"):
+                spec[dim] = "data"
+                break
+    return P(*spec)
+
+
+def param_shardings(params: Any, mesh: Mesh,
+                    cfg: Optional[ModelConfig] = None,
+                    fsdp: bool = False) -> Any:
+    """Tree of NamedShardings matching ``params`` (works on shapes or
+    ShapeDtypeStructs too)."""
+    def leaf_spec(kp, leaf):
+        path = tuple(getattr(k, "key", getattr(k, "idx", None))
+                     for k in kp)
+        path = tuple(str(x) for x in path)
+        return NamedSharding(mesh, param_spec(path, tuple(leaf.shape), mesh,
+                                              cfg, fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def batch_axes(mesh: Mesh):
+    """The (possibly compound) batch axis: ('pod','data') when a pod axis
+    exists, else 'data'."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else "data"
+
+
+def data_spec(shape: Tuple[int, ...], mesh: Mesh,
+              batch_dim: int = 0) -> P:
+    """Shard the batch dim over pod x data when divisible (else replicate)."""
+    ax = batch_axes(mesh)
+    spec = [None] * len(shape)
+    if _fits(shape, batch_dim, mesh, ax):
+        spec[batch_dim] = ax
+    elif not isinstance(ax, str) and _fits(shape, batch_dim, mesh, "data"):
+        spec[batch_dim] = "data"
+    return P(*spec)
+
+
+def batch_shardings(batch: Any, mesh: Mesh, batch_dim: int = 0) -> Any:
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(
+            mesh, data_spec(tuple(leaf.shape), mesh, batch_dim)), batch)
+
+
+def cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh, kv_mode: str = "auto") -> P:
+    """KV/state caches: (L, B, ...) — batch on data, heads (or head_dim)
+    on model when divisible.
+
+    ``kv_mode`` (perf-iteration knob, EXPERIMENTS.md §Perf):
+      auto — heads if divisible else head_dim (baseline)
+      seq  — shard the cache SEQUENCE axis over model: attention scores
+             are computed on local cache slices and only the (B,H,S)
+             score row / softmax stats cross the mesh, instead of
+             all-gathering the cache itself.
+      replicate — no model-axis sharding (ablation)
+    """
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    name = path[-1]
+    spec = [None] * ndim
+    ax = batch_axes(mesh)
+    # find the batch dim: stacked caches are (L, B, ...); xlstm caches are
+    # per-layer lists with batch leading; pos is scalar
+    if any("xlstm" in str(s) for s in path):
+        if _fits(shape, 0, mesh, ax):
+            return P(*((ax,) + (None,) * (ndim - 1)))
+        return P(*spec)
+    bdim = 1 if ndim >= 2 else 0
+    if _fits(shape, bdim, mesh, ax):
+        spec[bdim] = ax
+    elif not isinstance(ax, str) and _fits(shape, bdim, mesh, "data"):
+        spec[bdim] = "data"
+    if name in ("k", "v") and ndim >= 4:
+        # (L, B, S, Hkv, dh)
+        if kv_mode == "seq":
+            if _fits(shape, ndim - 3, mesh, "model"):
+                spec[ndim - 3] = "model"
+        elif kv_mode == "auto":
+            # prefer head sharding, fall back to head_dim
+            if _fits(shape, ndim - 2, mesh, "model"):
+                spec[ndim - 2] = "model"
+            elif _fits(shape, ndim - 1, mesh, "model"):
+                spec[ndim - 1] = "model"
+    elif name in ("state", "conv", "C", "n") and ndim >= 3:
+        # ssm state (L,B,H,N,dh) / conv (L,B,t,C) / mlstm C: shard dim 2
+        if _fits(shape, 2, mesh, "model"):
+            spec[2] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache: Any, mesh: Mesh, kv_mode: str = "auto") -> Any:
+    def leaf_spec(kp, leaf):
+        path = tuple(str(getattr(k, "key", getattr(k, "idx", ""))) for k in kp)
+        return NamedSharding(mesh, cache_spec(path, tuple(leaf.shape), mesh,
+                                              kv_mode=kv_mode))
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def explain_specs(params: Any, mesh: Mesh) -> Dict[str, str]:
+    """Human-readable map path -> spec (for DESIGN/EXPERIMENTS tables)."""
+    out = {}
+
+    def walk(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", "")))
+                        for k in kp)
+        out[path] = str(param_spec(
+            tuple(str(getattr(k, "key", getattr(k, "idx", ""))) for k in kp),
+            tuple(leaf.shape), mesh))
+        return leaf
+    jax.tree_util.tree_map_with_path(walk, params)
+    return out

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD) layer — zamba2's backbone mixer. [arXiv:2405.21060 form]
+
+Chunked "state-space dual" formulation: intra-chunk attention-like matmuls
+(MXU-friendly) + an inter-chunk recurrence scanned over chunks. Decode is
+the O(1) recurrent update. Grouped B/C (n_groups) as in Mamba2; D skip and
+depthwise conv front as in the reference implementation.
+
+Train path shapes: x (B, S, d_model); d_inner = expand * d_model;
+H = d_inner / headdim heads; state size N = d_state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, H, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [z | x+B+C (conv'd) | dt]
+        "w_in": _init(ks[0], (cfg.d_model, d_inner + conv_dim + H),
+                      dtype=dtype),
+        "conv_w": _init(ks[1], (s.d_conv, conv_dim), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "w_out": _init(ks[2], (d_inner, cfg.d_model), dtype=dtype),
+    }
+
+
+def _split_proj(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + conv_dim]
+    dt = proj[..., d_inner + conv_dim:]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc: jnp.ndarray, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    xs = xbc[..., :d_inner]
+    Bmat = xbc[..., d_inner:d_inner + gn]
+    Cmat = xbc[..., d_inner + gn:]
+    return xs, Bmat, Cmat
+
+
+def _conv_train(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                d_conv: int) -> jnp.ndarray:
+    """Causal depthwise conv over S. xbc: (B, S, C)."""
+    pads = jnp.pad(xbc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + xbc.shape[1]] * w[i] for i in range(d_conv))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, a_log, Bmat, Cmat, cfg: ModelConfig):
+    """SSD scan. x: (B,S,H,dh); dt: (B,S,H); Bmat/Cmat: (B,S,G,N)."""
+    s = cfg.ssm
+    Bsz, S, H, dh = x.shape
+    G, N = Bmat.shape[2], Bmat.shape[3]
+    Q = min(s.chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // Q
+    rep = H // G                                   # heads per group
+
+    A = -jnp.exp(a_log)                            # (H,), negative
+    dta = dt * A                                   # (B,Sp,H) log-decay
+    xdt = x * dt[..., None]                        # dt-weighted input
+
+    def c(t, extra=()):                            # chunk a time axis
+        return t.reshape((Bsz, nc, Q) + t.shape[2:])
+
+    xc, dtac = c(xdt), c(dta)
+    Bc = jnp.repeat(c(Bmat), rep, axis=3)          # (B,nc,Q,H,N) via group rep
+    Cc = jnp.repeat(c(Cmat), rep, axis=3)
+    la = jnp.cumsum(dtac, axis=2)                  # (B,nc,Q,H) cum log decay
+
+    # intra-chunk (attention-like): L[i,j] = exp(la_i - la_j) for j <= i.
+    # mask BEFORE exp: masked entries have la_i - la_j > 0 (la decreasing),
+    # and exp(big) = inf would poison the backward (inf * 0 -> NaN in vjp).
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    L = jnp.exp(seg)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", Cc, Bc) * L
+    y_intra = jnp.einsum("bcqkh,bckhd->bcqhd", scores, xc)
+
+    # chunk-final states: sum_j exp(la_Q - la_j) B_j (x_j dt_j)^T
+    decay_to_end = jnp.exp(la[:, :, -1:, :] - la)          # (B,nc,Q,H)
+    states = jnp.einsum("bcqh,bcqhn,bcqhd->bchnd",
+                        decay_to_end, Bc, xc)              # (B,nc,H,N,dh)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(la[:, :, -1, :])                 # (B,nc,H)
+
+    def step(prev, inp):
+        st, dec = inp                                      # (B,H,N,dh), (B,H)
+        new = prev * dec[..., None, None] + st
+        return new, prev                                   # emit state BEFORE chunk
+
+    init = jnp.zeros((Bsz, H, N, dh), x.dtype)
+    _, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,nc,H,N,dh)
+
+    y_inter = jnp.einsum("bcqh,bcqhn,bchnd->bcqhd",
+                         jnp.exp(la), Cc, prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, dh)
+    return y[:, :S]
+
+
+def ssm_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence Mamba2 mixer. x: (B, S, d_model)."""
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    B_, S, _ = x.shape
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc = _conv_train(xbc, p["conv_w"], p["conv_b"], s.d_conv)
+    xs, Bmat, Cmat = _split_xbc(xbc, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(B_, S, H, s.headdim)
+    Bm = Bmat.reshape(B_, S, s.n_groups, s.d_state)
+    Cm = Cmat.reshape(B_, S, s.n_groups, s.d_state)
+    y = ssd_chunked(xh.astype(jnp.float32), dt, p["a_log"], Bm.astype(jnp.float32),
+                    Cm.astype(jnp.float32), cfg)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = (y.reshape(B_, S, d_inner) * jax.nn.silu(z.astype(jnp.float32)))
+    return jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_out"])
+
+
+# ---------------------------------------------------------------- decode
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, s.d_state, s.headdim), dtype),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(p: Params, x: jnp.ndarray, cache: Params,
+               cfg: ModelConfig) -> Tuple[jnp.ndarray, Params]:
+    """One-token recurrent update. x: (B, 1, d_model)."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    B_ = x.shape[0]
+    z, xbc, dt = _split_proj(p, x, cfg)                     # (B,1,*)
+    # depthwise conv via cache of the last d_conv-1 inputs
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)    # (B,d_conv,C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("btc,tc->bc", hist, p["conv_w"]) + p["conv_b"])[:, None]
+    new_conv = hist[:, 1:]
+    xs, Bmat, Cmat = _split_xbc(conv_out, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    xh = xs.reshape(B_, H, s.headdim).astype(jnp.float32)
+    rep = H // s.n_groups
+    Bm = jnp.repeat(Bmat.reshape(B_, s.n_groups, s.d_state), rep, 1)  # (B,H,N)
+    Cm = jnp.repeat(Cmat.reshape(B_, s.n_groups, s.d_state), rep, 1)
+    A = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * A)                                 # (B,H)
+    upd = jnp.einsum("bh,bhn,bhd->bhnd", dt, Bm, xh)
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnd->bhd", Cm, state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = (y.reshape(B_, 1, d_inner)
+         * jax.nn.silu(z.astype(jnp.float32)))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_out"])
+    return out, {"state": state, "conv": new_conv}
+
+
+def ssm_reference(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Sequential-scan oracle for ssd_chunked (tests only)."""
+    B_, S, _ = x.shape
+    cache = ssm_cache_init(cfg, B_)
+    outs = []
+    for t in range(S):
+        o, cache = ssm_decode(p, x[:, t:t + 1], cache, cfg)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,6 @@
+"""Training layer: optimizers + robust-DP trainer."""
+from repro.train.optimizer import AdamW, SGD, apply_updates, global_norm
+from repro.train.trainer import TrainConfig, Trainer, make_train_step
+
+__all__ = ["AdamW", "SGD", "apply_updates", "global_norm", "TrainConfig",
+           "Trainer", "make_train_step"]

@@ -1,0 +1,97 @@
+"""Minimal pytree optimizers (AdamW, SGD+momentum) — no external deps.
+
+API mirrors optax: ``opt.init(params) -> state``, ``opt.update(grads,
+state, params) -> (updates, state)``; apply with ``apply_updates``.
+Optimizer state mirrors the param tree so it inherits param shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0        # global-norm clip; 0 disables
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(zeros, params),
+                          nu=jax.tree_util.tree_map(zeros, params))
+
+    def update(self, grads: Any, state: AdamWState, params: Any
+               ) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        if self.grad_clip > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            u = -self.lr * (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay > 0:
+                u = u - self.lr * self.weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+        updates = jax.tree_util.tree_map(upd, params, mu, nu)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    mom: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 0.1
+    momentum: float = 0.9
+
+    def init(self, params: Any) -> SGDState:
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            mom=jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(self, grads: Any, state: SGDState, params: Any
+               ) -> Tuple[Any, SGDState]:
+        mom = jax.tree_util.tree_map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state.mom, grads)
+        updates = jax.tree_util.tree_map(
+            lambda p, m: (-self.lr * m).astype(p.dtype), params, mom)
+        return updates, SGDState(step=state.step + 1, mom=mom)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

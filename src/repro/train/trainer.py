@@ -1,0 +1,146 @@
+"""Training loop: per-machine gradients -> DP noise -> robust aggregation
+-> optimizer update. The paper's technique as a first-class feature.
+
+The global batch is split into ``n_machines`` groups (the paper's node
+machines = data-parallel ranks; on a mesh the machine axis is sharded over
+pod x data). ``jax.vmap`` over the machine axis yields one gradient per
+machine; dist/grad_agg.py then applies the Gaussian mechanism + Byzantine
+simulation + the robust aggregator; the aggregate feeds a standard
+optimizer. With ``method="mean"``/``sigma=0``/no attack this reduces to
+ordinary data-parallel training (psum) — asserted in tests.
+
+Activation memory: the block scan is rematerialised (jax.checkpoint), so
+live activations are one layer's, per machine, per microbatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.grad_agg import GradAggConfig, robust_aggregate
+from repro.models import sharding as shd
+from repro.models.model import Model
+from repro.train.optimizer import AdamW, apply_updates, global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    n_machines: int = 4
+    microbatch: int = 0            # per-machine microbatch; 0 = whole batch
+    remat: bool = True
+    fsdp: bool = False             # ZeRO-style weight sharding over "data"
+    grad_dtype: str = ""           # "" = native; "bfloat16" halves the
+    #                                aggregation payload (§Perf knob)
+    agg: GradAggConfig = GradAggConfig(method="mean")
+
+
+def _split_machines(batch: Dict[str, jnp.ndarray], m: int):
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+
+
+def make_loss_fn(model: Model, remat: bool = True):
+    def loss_fn(params, batch):
+        loss, aux = model.loss(params, batch)
+        return loss, aux
+    return loss_fn
+
+
+def make_train_step(model: Model, opt: AdamW, tcfg: TrainConfig,
+                    mesh: Optional[Mesh] = None):
+    """Returns train_step(params, opt_state, batch, key, byz_mask) ->
+    (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(model, tcfg.remat)
+    m = tcfg.n_machines
+
+    def machine_grad(params, mb):
+        """Gradient of one machine's local loss (optionally microbatched)."""
+        if tcfg.microbatch:
+            B = mb["tokens"].shape[0]
+            k = max(1, B // tcfg.microbatch)
+            chunks = jax.tree_util.tree_map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), mb)
+
+            def acc_step(carry, chunk):
+                lsum, gsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, chunk)
+                return (lsum + l / k,
+                        jax.tree_util.tree_map(
+                            lambda a, b: a + b / k, gsum, g)), None
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros(()), zero), chunks)
+            return loss, grads
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        return loss, grads
+
+    def train_step(params, opt_state, batch, key,
+                   byz_mask: Optional[jnp.ndarray] = None):
+        mb = _split_machines(batch, m)
+        losses, grads = jax.vmap(lambda b: machine_grad(params, b))(mb)
+        if tcfg.grad_dtype:
+            dt = jnp.dtype(tcfg.grad_dtype)
+            grads = jax.tree_util.tree_map(lambda g: g.astype(dt), grads)
+        machine_specs = None
+        if mesh is not None:
+            # machine axis on pod x data; payload dims keep the PARAM
+            # sharding (dropping it replicates every machine's grad over
+            # the model axis — a 16x memory/collective blow-up, found and
+            # fixed in EXPERIMENTS.md §Perf HC-train it1).
+            ax = shd.batch_axes(mesh)
+
+            def mspec(kp, g):
+                path = tuple(str(getattr(k, "key", getattr(k, "idx", "")))
+                             for k in kp)
+                ps = shd.param_spec(path, tuple(g.shape[1:]), mesh,
+                                    fsdp=tcfg.fsdp)
+                return P(*((ax,) + tuple(ps)))
+            machine_specs = jax.tree_util.tree_map_with_path(mspec, grads)
+            grads = jax.lax.with_sharding_constraint(
+                grads, jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), machine_specs))
+        if tcfg.agg.strategy != "sharded":
+            machine_specs = None
+        agg = robust_aggregate(grads, tcfg.agg, key, byz_mask,
+                               mesh=mesh, machine_specs=machine_specs)
+        updates, opt_state = opt.update(agg, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": losses.mean(),
+                   "loss_per_machine": losses,
+                   "grad_norm": global_norm(agg)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Convenience loop for the examples: synthetic LM data, logging."""
+
+    def __init__(self, model: Model, opt: AdamW, tcfg: TrainConfig,
+                 mesh: Optional[Mesh] = None):
+        self.model, self.opt, self.tcfg = model, opt, tcfg
+        self.step_fn = jax.jit(make_train_step(model, opt, tcfg, mesh))
+
+    def fit(self, params, batches, key, byz_mask=None, log_every: int = 10,
+            callback=None):
+        opt_state = self.opt.init(params)
+        history = []
+        for i, batch in enumerate(batches):
+            key, sub = jax.random.split(key)
+            params, opt_state, metrics = self.step_fn(
+                params, opt_state, batch, sub, byz_mask)
+            if i % log_every == 0 or callback:
+                loss = float(metrics["loss"])
+                history.append({"step": i, "loss": loss})
+                if callback:
+                    callback(i, metrics)
+        return params, opt_state, history

@@ -1,0 +1,78 @@
+"""BFGS update algebra: rank-1 V operator, secant equation, L-BFGS."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bfgs import (LBFGSMemory, VOp, bfgs_dir_product,
+                             bfgs_inverse_update, lbfgs_two_loop, make_v)
+
+
+def _rand_spd(key, p):
+    a = jax.random.normal(key, (p, p))
+    return a @ a.T + p * jnp.eye(p)
+
+
+def test_v_op_matches_dense():
+    key = jax.random.PRNGKey(0)
+    p = 7
+    s = jax.random.normal(jax.random.fold_in(key, 1), (p,))
+    y = jax.random.normal(jax.random.fold_in(key, 2), (p,))
+    x = jax.random.normal(jax.random.fold_in(key, 3), (p,))
+    v = make_v(s, y)
+    v_dense = jnp.eye(p) - v.rho * jnp.outer(y, s)
+    np.testing.assert_allclose(np.asarray(v(x)), np.asarray(v_dense @ x),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(v(x, transpose=True)),
+                               np.asarray(v_dense.T @ x), rtol=1e-5)
+
+
+def test_bfgs_update_satisfies_secant():
+    """H^+ y = s (eq. 4.1): the defining quasi-Newton property."""
+    key = jax.random.PRNGKey(1)
+    p = 6
+    h = jnp.linalg.inv(_rand_spd(jax.random.fold_in(key, 1), p))
+    s = jax.random.normal(jax.random.fold_in(key, 2), (p,))
+    y = jax.random.normal(jax.random.fold_in(key, 3), (p,))
+    y = jnp.where(jnp.dot(s, y) > 0, y, -y)  # curvature condition
+    h_new = bfgs_inverse_update(h, s, y)
+    np.testing.assert_allclose(np.asarray(h_new @ y), np.asarray(s),
+                               rtol=1e-4, atol=1e-5)
+    # symmetry preserved
+    np.testing.assert_allclose(np.asarray(h_new), np.asarray(h_new.T),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_bfgs_dir_product_matches_dense_update():
+    key = jax.random.PRNGKey(2)
+    p = 5
+    h = jnp.linalg.inv(_rand_spd(jax.random.fold_in(key, 1), p))
+    s = jax.random.normal(jax.random.fold_in(key, 2), (p,))
+    y = s + 0.1 * jax.random.normal(jax.random.fold_in(key, 3), (p,))
+    g = jax.random.normal(jax.random.fold_in(key, 4), (p,))
+    v = make_v(s, y)
+    h_new = bfgs_inverse_update(h, s, y)
+    prod = bfgs_dir_product(lambda x: h @ x, v, g, rho_term=True)
+    np.testing.assert_allclose(np.asarray(prod), np.asarray(h_new @ g),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_lbfgs_two_loop_matches_dense_bfgs():
+    key = jax.random.PRNGKey(3)
+    p, hist = 8, 4
+    mem = LBFGSMemory.init(hist, p)
+    h = jnp.eye(p)
+    for i in range(3):
+        s = jax.random.normal(jax.random.fold_in(key, 10 + i), (p,))
+        y = s + 0.2 * jax.random.normal(jax.random.fold_in(key, 20 + i), (p,))
+        h = bfgs_inverse_update(h, s, y)
+        mem = mem.push(s, y)
+    g = jax.random.normal(jax.random.fold_in(key, 99), (p,))
+    np.testing.assert_allclose(np.asarray(lbfgs_two_loop(mem, g)),
+                               np.asarray(h @ g), rtol=1e-4, atol=1e-4)
+
+
+def test_lbfgs_empty_memory_is_identity():
+    mem = LBFGSMemory.init(4, 6)
+    g = jnp.arange(6.0)
+    np.testing.assert_allclose(np.asarray(lbfgs_two_loop(mem, g)),
+                               np.asarray(g), rtol=1e-6)

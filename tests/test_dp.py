@@ -1,0 +1,96 @@
+"""DP layer: mechanism calibration, tail sensitivities, composition."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dp
+
+
+def test_gaussian_sigma_lemma21():
+    s = dp.gaussian_sigma(sensitivity=1.0, eps=1.0, delta=1e-5)
+    assert abs(s - math.sqrt(2 * math.log(1.25e5))) < 1e-9
+
+
+def test_noise_multiplier():
+    assert abs(dp.noise_multiplier(2.0, 0.01)
+               - math.sqrt(2 * math.log(100)) / 2.0) < 1e-12
+
+
+def test_subgauss_vs_subexp_sqrt_logn_gap():
+    """Remark 4.4: sub-Gaussian buys a sqrt(log n) factor."""
+    p, n, g = 10, 4000, 2.0
+    ratio = (dp.mean_sensitivity_subexp(p, n, g)
+             / dp.mean_sensitivity_subgauss(p, n, g))
+    assert abs(ratio - math.sqrt(math.log(n))) < 1e-9
+    s_se = dp.s1_theta(p, n, g, 1.0, 0.01, 0.25, "subexp")
+    s_sg = dp.s1_theta(p, n, g, 1.0, 0.01, 0.25, "subgauss")
+    assert abs(s_se / s_sg - math.sqrt(math.log(n))) < 1e-9
+
+
+def test_failure_probs_decrease_with_gamma_and_n():
+    f1 = dp.mean_dp_failure_prob_subexp(10, 1000, 1.0, 1.0, 1.0)
+    f2 = dp.mean_dp_failure_prob_subexp(10, 1000, 3.0, 1.0, 1.0)
+    f3 = dp.mean_dp_failure_prob_subexp(10, 100000, 1.0, 1.0, 1.0)
+    assert f2 < f1 and f3 < f1
+
+
+def test_compose_basic():
+    e, d = dp.compose_basic([(1.0, 0.01)] * 5)
+    assert e == 5.0 and abs(d - 0.05) < 1e-12
+
+
+def test_compose_advanced_beats_basic_small_eps():
+    """Cor 4.1: for small eps the advanced bound is < k*eps."""
+    e_adv, d_adv = dp.compose_advanced(0.1, 1e-4, 50, slack=1e-3)
+    assert e_adv < 50 * 0.1
+    # and never worse than basic
+    e2, _ = dp.compose_advanced(5.0, 1e-4, 3, slack=1e-3)
+    assert e2 <= 15.0 + 1e-9
+
+
+def test_accountant_tracks_five_rounds():
+    a = dp.PrivacyAccountant()
+    for i in range(5):
+        a.spend(f"r{i}", 6.0, 0.01, 0.1, failure_prob=1e-4)
+    eb, db = a.total_basic()
+    assert abs(eb - 30.0) < 1e-9 and abs(db - 0.05) < 1e-9
+    ea, da = a.total_advanced()
+    assert ea <= 30.0 + 1e-9
+    assert abs(a.total_failure_prob() - 5e-4) < 1e-12
+    assert "advanced" in a.summary()
+
+
+def test_add_noise_statistics():
+    key = jax.random.PRNGKey(0)
+    x = jnp.zeros((200_00,))
+    y = dp.add_noise(key, x, 2.0)
+    assert abs(float(y.std()) - 2.0) < 0.05
+
+
+def test_mechanism_achieves_dp_empirically():
+    """Crude (eps, delta) audit on a 1-d count query with sensitivity 1:
+    P[M(X) in S] <= e^eps P[M(X') in S] + delta for threshold sets."""
+    eps, delta = 1.0, 1e-3
+    s = dp.gaussian_sigma(1.0, eps, delta)
+    key = jax.random.PRNGKey(1)
+    n = 200_000
+    noise = np.asarray(s * jax.random.normal(key, (n,)))
+    a = 0.0 + noise          # M(X)
+    b = 1.0 + noise          # M(X')
+    ts = np.linspace(-3, 6, 40)
+    for t in ts:
+        pa = (a >= t).mean()
+        pb = (b >= t).mean()
+        assert pa <= math.exp(eps) * pb + delta + 0.005
+        assert pb <= math.exp(eps) * pa + delta + 0.005
+
+
+def test_variance_sensitivity_thm46():
+    assert dp.variance_sensitivity(1000, 1.0) == (4 * math.log(1000) + 1) / 1000
+    with pytest.raises(ValueError):
+        dp.variance_sensitivity(1000, 0.5)
+    s6 = dp.s6_variance(10, 1000, 1.0, 1.0, 0.05)
+    assert s6 > 0

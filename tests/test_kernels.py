@@ -1,0 +1,139 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU) + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.dcq import dcq_pallas
+from repro.kernels.dcq_ref import dcq_mad_reference
+from repro.kernels.gqa_decode import gqa_decode_pallas
+from repro.kernels.gqa_decode_ref import gqa_decode_reference
+from repro.kernels import ops
+
+
+# ------------------------------------------------------------------ DCQ
+
+@pytest.mark.parametrize("m", [5, 9, 16, 33, 64])
+@pytest.mark.parametrize("p", [16, 100, 513])
+def test_dcq_kernel_shape_sweep(m, p):
+    v = jax.random.normal(jax.random.PRNGKey(m * 1000 + p), (m, p)) * 2.5
+    out = dcq_pallas(v, tile=128)
+    ref = dcq_mad_reference(v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dcq_kernel_dtypes(dtype):
+    v = (jax.random.normal(jax.random.PRNGKey(0), (17, 64)) * 3).astype(dtype)
+    out = dcq_pallas(v, tile=64)
+    ref = dcq_mad_reference(v.astype(jnp.float32))
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=0.05, rtol=0.05)
+
+
+def test_dcq_kernel_byzantine_resistance():
+    """A minority of wild rows must not move the kernel's aggregate much."""
+    key = jax.random.PRNGKey(1)
+    v = jax.random.normal(key, (40, 32)) + 2.0
+    v_bad = v.at[:4].multiply(-30.0)
+    clean = dcq_pallas(v, tile=32)
+    atk = dcq_pallas(v_bad, tile=32)
+    assert float(jnp.abs(atk - clean).max()) < 0.5
+    # the mean is destroyed by the same attack
+    assert float(jnp.abs(v_bad.mean(0) - v.mean(0)).max()) > 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(3, 40), p=st.integers(1, 70),
+       shift=st.floats(-100.0, 100.0), scale=st.floats(0.01, 50.0))
+def test_dcq_kernel_affine_property(m, p, shift, scale):
+    """DCQ is affine-equivariant: dcq(a*x + b) = a*dcq(x) + b (a > 0)."""
+    v = jax.random.normal(jax.random.PRNGKey(m * 97 + p), (m, p))
+    base = dcq_pallas(v, tile=64)
+    trans = dcq_pallas(scale * v + shift, tile=64)
+    np.testing.assert_allclose(np.asarray(trans),
+                               np.asarray(scale * base + shift),
+                               atol=5e-3 * max(1.0, scale, abs(shift)),
+                               rtol=1e-3)
+
+
+# ----------------------------------------------------------- GQA decode
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,Dh,ts", [
+    (2, 128, 8, 2, 64, 32),
+    (3, 96, 4, 4, 128, 64),
+    (1, 1024, 16, 2, 128, 256),
+    (4, 33, 8, 1, 64, 16),      # ragged S vs tile
+])
+def test_gqa_decode_shape_sweep(B, S, Hq, Hkv, Dh, ts):
+    kq, kk, kv, kl = jax.random.split(jax.random.PRNGKey(B * S), 4)
+    q = jax.random.normal(kq, (B, Hq, Dh))
+    k = jax.random.normal(kk, (B, S, Hkv, Dh))
+    v = jax.random.normal(kv, (B, S, Hkv, Dh))
+    clen = jax.random.randint(kl, (B,), 1, S + 1)
+    out = gqa_decode_pallas(q, k, v, clen, ts=ts)
+    ref = gqa_decode_reference(q, k, v, clen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gqa_decode_dtypes(dtype):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(kq, (2, 8, 64)).astype(dtype)
+    k = jax.random.normal(kk, (2, 64, 2, 64)).astype(dtype)
+    v = jax.random.normal(kv, (2, 64, 2, 64)).astype(dtype)
+    clen = jnp.array([64, 30], jnp.int32)
+    out = gqa_decode_pallas(q, k, v, clen, ts=32)
+    ref = gqa_decode_reference(q.astype(jnp.float32),
+                               k.astype(jnp.float32),
+                               v.astype(jnp.float32), clen)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=0.05, rtol=0.05)
+
+
+def test_gqa_decode_matches_model_path():
+    """The kernel agrees with the model's flash.decode_attention path."""
+    from repro.models import flash
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(9), 3)
+    B, S, Hq, Hkv, Dh = 2, 256, 8, 2, 64
+    q = jax.random.normal(kq, (B, 1, Hq, Dh))
+    k = jax.random.normal(kk, (B, S, Hkv, Dh))
+    v = jax.random.normal(kv, (B, S, Hkv, Dh))
+    clen = jnp.array([S, S // 2], jnp.int32)
+    model_out = flash.decode_attention(q, k, v, clen)[:, 0]
+    kern_out = gqa_decode_pallas(q[:, 0], k, v, clen, ts=64)
+    np.testing.assert_allclose(np.asarray(kern_out),
+                               np.asarray(model_out), atol=2e-5, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(S=st.integers(8, 200), clen0=st.integers(1, 200))
+def test_gqa_decode_length_invariance(S, clen0):
+    """Entries past cache_len never affect the output."""
+    clen = min(clen0, S)
+    kq, kk, kv, kg = jax.random.split(jax.random.PRNGKey(S * 31 + clen), 4)
+    q = jax.random.normal(kq, (1, 4, 64))
+    k = jax.random.normal(kk, (1, S, 2, 64))
+    v = jax.random.normal(kv, (1, S, 2, 64))
+    garbage = 100.0 * jax.random.normal(kg, (1, S, 2, 64))
+    mask = (jnp.arange(S) < clen)[None, :, None, None]
+    k2 = jnp.where(mask, k, garbage)
+    v2 = jnp.where(mask, v, garbage)
+    cl = jnp.array([clen], jnp.int32)
+    a = gqa_decode_pallas(q, k, v, cl, ts=32)
+    b = gqa_decode_pallas(q, k2, v2, cl, ts=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_ops_wrappers_dispatch():
+    v = jax.random.normal(jax.random.PRNGKey(3), (9, 32))
+    np.testing.assert_allclose(
+        np.asarray(ops.dcq_aggregate(v)),
+        np.asarray(ops.dcq_aggregate(v, prefer="jnp")), atol=5e-5)

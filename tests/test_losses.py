@@ -1,0 +1,63 @@
+"""Closed-form loss derivatives must agree with autodiff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import PROBLEMS, get_problem
+from repro.data.synthetic import (linear_data, logistic_data, poisson_data,
+                                  target_theta)
+
+_DATA = {"logistic": logistic_data, "poisson": poisson_data,
+         "linear": linear_data, "huber": linear_data}
+
+
+@pytest.mark.parametrize("name", list(PROBLEMS))
+def test_grad_matches_autodiff(name):
+    prob = get_problem(name)
+    X, y = _DATA[name](jax.random.PRNGKey(0), 200, 5)
+    theta = 0.3 * jnp.ones((5,))
+    g_closed = prob.grad(theta, X, y)
+    g_auto = jax.grad(lambda t: prob.loss(t, X, y))(theta)
+    np.testing.assert_allclose(np.asarray(g_closed), np.asarray(g_auto),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["logistic", "poisson", "linear"])
+def test_hessian_matches_autodiff(name):
+    prob = get_problem(name)
+    X, y = _DATA[name](jax.random.PRNGKey(1), 200, 4)
+    theta = 0.2 * jnp.ones((4,))
+    h_closed = prob.hessian(theta, X, y)
+    h_auto = jax.hessian(lambda t: prob.loss(t, X, y))(theta)
+    np.testing.assert_allclose(np.asarray(h_closed), np.asarray(h_auto),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["logistic", "poisson", "linear"])
+def test_per_sample_quantities_consistent(name):
+    prob = get_problem(name)
+    X, y = _DATA[name](jax.random.PRNGKey(2), 64, 3)
+    theta = 0.1 * jnp.ones((3,))
+    g = prob.per_sample_grads(theta, X, y)
+    np.testing.assert_allclose(np.asarray(g.mean(0)),
+                               np.asarray(prob.grad(theta, X, y)), rtol=1e-5)
+    h = prob.per_sample_hessians(theta, X, y)
+    np.testing.assert_allclose(np.asarray(h.mean(0)),
+                               np.asarray(prob.hessian(theta, X, y)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_losses_are_convex_along_lines():
+    # spot-check convexity: f(mid) <= (f(a)+f(b))/2 along random segments
+    for name in ("logistic", "poisson", "linear", "huber"):
+        prob = get_problem(name)
+        X, y = _DATA[name](jax.random.PRNGKey(3), 100, 4)
+        key = jax.random.PRNGKey(4)
+        for i in range(5):
+            ka, kb = jax.random.split(jax.random.fold_in(key, i))
+            a = jax.random.normal(ka, (4,))
+            b = jax.random.normal(kb, (4,))
+            fa, fb = prob.loss(a, X, y), prob.loss(b, X, y)
+            fm = prob.loss(0.5 * (a + b), X, y)
+            assert float(fm) <= float(0.5 * (fa + fb)) + 1e-5

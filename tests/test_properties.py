@@ -1,0 +1,116 @@
+"""Hypothesis property tests for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dp
+from repro.core.bfgs import bfgs_inverse_update, make_v
+from repro.core.dcq import dcq, d_k
+from repro.core.robust_agg import median_agg, trimmed_mean_agg
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@_settings
+@given(st.integers(min_value=1, max_value=60))
+def test_dk_monotone_decreasing_in_k(K):
+    """More quantile levels never hurt efficiency: D_K decreasing, >= pi/3."""
+    assert d_k(K) >= np.pi / 3 - 1e-6
+    if K > 1:
+        assert d_k(K) <= d_k(K - 1) + 1e-9
+
+
+@_settings
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.integers(min_value=5, max_value=200),
+       st.floats(min_value=0.05, max_value=10.0))
+def test_dcq_translation_and_scale_equivariance(seed, m, scale):
+    """DCQ(a*Y + b) = a*DCQ(Y) + b when the scale argument transforms too."""
+    key = jax.random.PRNGKey(seed)
+    vals = jax.random.normal(key, (m, 2))
+    base = dcq(vals, jnp.full((2,), 1.0), K=7)
+    shifted = dcq(scale * vals + 3.0, jnp.full((2,), scale), K=7)
+    np.testing.assert_allclose(np.asarray(shifted),
+                               np.asarray(scale * base + 3.0),
+                               rtol=1e-4, atol=1e-4)
+
+
+@_settings
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.integers(min_value=11, max_value=101))
+def test_dcq_bounded_by_sample_range(seed, m):
+    """Robustness invariant: the estimate stays within a widened data range."""
+    key = jax.random.PRNGKey(seed)
+    vals = 10.0 * jax.random.normal(key, (m, 1))
+    est = dcq(vals, jnp.full((1,), 10.0), K=10)
+    lo, hi = float(vals.min()), float(vals.max())
+    width = hi - lo
+    assert lo - 0.5 * width <= float(est[0]) <= hi + 0.5 * width
+
+
+@_settings
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_median_breakdown_point(seed):
+    """Corrupting <50% of machines by huge values cannot move the median
+    beyond the clean sample range."""
+    key = jax.random.PRNGKey(seed)
+    m = 51
+    vals = jax.random.normal(key, (m, 3))
+    n_bad = 25
+    corrupted = vals.at[:n_bad].set(1e6)
+    med = median_agg(corrupted)
+    assert np.all(np.asarray(med) <= np.asarray(vals.max(0)) + 1e-6)
+
+
+@_settings
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.floats(min_value=0.1, max_value=0.4))
+def test_trimmed_mean_kills_extreme_outliers(seed, beta):
+    key = jax.random.PRNGKey(seed)
+    m = 100
+    vals = jax.random.normal(key, (m, 2))
+    n_bad = int(beta * m / 2)  # strictly fewer than trimmed from each side
+    corrupted = vals.at[:max(n_bad - 1, 0)].set(1e8)
+    tm = trimmed_mean_agg(corrupted, beta=beta)
+    assert np.all(np.abs(np.asarray(tm)) < 10.0)
+
+
+@_settings
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.integers(min_value=2, max_value=12))
+def test_bfgs_update_preserves_spd(seed, p):
+    """BFGS keeps H^{-1} symmetric positive definite when s^T y > 0."""
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(jax.random.fold_in(key, 0), (p, p))
+    h = jnp.linalg.inv(a @ a.T + p * jnp.eye(p))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (p,))
+    y = jax.random.normal(jax.random.fold_in(key, 2), (p,))
+    y = jnp.where(jnp.dot(s, y) > 0, y, -y) + 0.1 * s
+    h_new = bfgs_inverse_update(h, s, y)
+    evals = np.linalg.eigvalsh(np.asarray(h_new, np.float64))
+    assert evals.min() > -1e-5
+    # secant equation
+    np.testing.assert_allclose(np.asarray(h_new @ y), np.asarray(s),
+                               rtol=2e-3, atol=2e-3)
+
+
+@_settings
+@given(st.floats(min_value=0.05, max_value=5.0),
+       st.floats(min_value=1e-6, max_value=0.1),
+       st.integers(min_value=1, max_value=20))
+def test_advanced_composition_never_worse_than_basic(eps, delta, k):
+    e_adv, d_adv = dp.compose_advanced(eps, delta, k, slack=1e-3)
+    assert e_adv <= k * eps + 1e-9
+    assert d_adv >= k * delta - 1e-9 or d_adv >= 0
+
+
+@_settings
+@given(st.integers(min_value=100, max_value=10 ** 6),
+       st.floats(min_value=0.5, max_value=5.0))
+def test_noise_scales_inversely_with_n(n, gamma):
+    """All five round calibrations must shrink as local sample size grows."""
+    args = dict(p=10, gamma=gamma, eps=1.0, delta=0.01)
+    for fn in (lambda n: dp.s1_theta(n=n, lambda_s=0.2, **args),
+               lambda n: dp.s2_grad(n=n, **args)):
+        assert fn(2 * n) < fn(n)

@@ -1,0 +1,142 @@
+"""Algorithm 1 end-to-end: estimator quality, orderings, Byzantine, DP."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ProtocolConfig
+from repro.core import DPQNProtocol, get_problem
+from repro.core.byzantine import byzantine_mask
+from repro.core.local import newton_solve
+from repro.data.synthetic import make_shards, target_theta
+
+M, N, P = 60, 800, 6
+
+
+@pytest.fixture(scope="module")
+def logistic_shards():
+    return make_shards(jax.random.PRNGKey(0), "logistic", M, N, P)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return get_problem("logistic")
+
+
+def _err(v, p=P):
+    return float(jnp.linalg.norm(v - target_theta(p)))
+
+
+def test_noiseless_protocol_near_global_mle(logistic_shards, problem):
+    X, y = logistic_shards
+    cfg = ProtocolConfig(noiseless=True)
+    res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(1), X, y)
+    tg = newton_solve(problem, jnp.zeros(P), X.reshape(-1, P), y.reshape(-1))
+    # all three stages sit within the aggregation-noise floor of the
+    # global MLE; absolute error near the statistical floor.
+    for v in (res.theta_cq, res.theta_os, res.theta_qn):
+        assert float(jnp.linalg.norm(v - tg)) < 0.05
+    assert _err(res.theta_qn) < 0.15
+
+
+def test_newton_step_contracts_from_bad_init(logistic_shards, problem):
+    """The one-stage/qN iterations must pull a deliberately perturbed initial
+    estimate back towards the global MLE (Thms 4.2/4.3 contraction)."""
+    X, y = logistic_shards
+    cfg = ProtocolConfig(noiseless=True)
+    tg = newton_solve(problem, jnp.zeros(P), X.reshape(-1, P), y.reshape(-1))
+    bad = tg + 0.3 * jnp.ones((P,)) / np.sqrt(P)
+    res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(1), X, y,
+                                         theta_cq_override=bad)
+    d_bad = float(jnp.linalg.norm(bad - tg))
+    d_os = float(jnp.linalg.norm(res.theta_os - tg))
+    d_qn = float(jnp.linalg.norm(res.theta_qn - tg))
+    assert d_os < 0.35 * d_bad
+    assert d_qn < 0.15 * d_bad
+    assert d_qn < d_os  # the BFGS second iteration refines further
+
+
+def test_private_protocol_reasonable_error(logistic_shards, problem):
+    X, y = logistic_shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(2), X, y)
+    assert _err(res.theta_qn) < 0.5
+    eb, db = res.accountant.total_basic()
+    assert abs(eb - 30.0) < 1e-6 and abs(db - 0.05) < 1e-6
+
+
+def test_more_budget_less_error(logistic_shards, problem):
+    X, y = logistic_shards
+    errs = []
+    for eps in (4.0, 50.0):
+        # average over keys to kill noise-draw luck
+        e = np.mean([
+            _err(DPQNProtocol(problem, ProtocolConfig(eps=eps, delta=0.05))
+                 .run(jax.random.PRNGKey(k), X, y).theta_qn)
+            for k in range(3)])
+        errs.append(e)
+    assert errs[1] < errs[0]
+
+
+def test_byzantine_robustness(logistic_shards, problem):
+    """10% scaling attack: DCQ protocol stays close; mean aggregation breaks."""
+    X, y = logistic_shards
+    mask = byzantine_mask(jax.random.PRNGKey(3), M, 0.15)
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    kw = dict(byz_mask=mask, attack="scale", attack_factor=-10.0)
+    res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(4), X, y, **kw)
+    cfg_mean = dataclasses.replace(cfg, aggregator="mean")
+    res_mean = DPQNProtocol(problem, cfg_mean).run(jax.random.PRNGKey(4),
+                                                   X, y, **kw)
+    assert _err(res.theta_qn) < 0.5
+    assert _err(res_mean.theta_qn) > 1.5 * _err(res.theta_qn)
+
+
+def test_byzantine_iterations_help(logistic_shards, problem):
+    """Paper Fig 1 (alpha=10%): os/qn improve notably over the initial cq."""
+    X, y = logistic_shards
+    mask = byzantine_mask(jax.random.PRNGKey(5), M, 0.1)
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    errs = {"cq": [], "qn": []}
+    for k in range(3):
+        res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(10 + k), X, y,
+                                             byz_mask=mask)
+        errs["cq"].append(_err(res.theta_cq))
+        errs["qn"].append(_err(res.theta_qn))
+    assert np.mean(errs["qn"]) < np.mean(errs["cq"])
+
+
+def test_median_and_trimmed_aggregators_work(logistic_shards, problem):
+    X, y = logistic_shards
+    for agg in ("median", "trimmed"):
+        cfg = ProtocolConfig(eps=30.0, delta=0.05, aggregator=agg)
+        res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(6), X, y)
+        assert _err(res.theta_qn) < 0.6, agg
+
+
+def test_untrusted_center_mode(logistic_shards, problem):
+    """§4.3: median everywhere but the gradient round; still consistent."""
+    X, y = logistic_shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05, center_trust="untrusted")
+    res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(7), X, y)
+    assert _err(res.theta_qn) < 0.6
+    # the extra variance transmission is accounted
+    assert any("R2b" in r.name for r in res.accountant.records)
+
+
+def test_poisson_problem(problem):
+    X, y = make_shards(jax.random.PRNGKey(8), "poisson", 40, 600, 5)
+    prob = get_problem("poisson")
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    res = DPQNProtocol(prob, cfg).run(jax.random.PRNGKey(9), X, y)
+    assert _err(res.theta_qn, 5) < 0.5
+
+
+def test_noise_sd_reported(logistic_shards, problem):
+    X, y = logistic_shards
+    cfg = ProtocolConfig(eps=20.0, delta=0.05)
+    res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(11), X, y)
+    for k in ("s1", "s2", "s3", "s4", "s5"):
+        assert res.noise_sd[k] > 0

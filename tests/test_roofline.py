@@ -1,0 +1,78 @@
+"""Roofline machinery unit tests: HLO collective parser, layer
+extrapolation, param counting, model-FLOP accounting."""
+import jax
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch import roofline
+
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+ENTRY main {
+  %p0 = bf16[16,1024]{1,0} parameter(0)
+  %ag = bf16[256,1024]{1,0} all-gather(%p0), replica_groups={...}
+  %ar = f32[512]{0} all-reduce(%x), to_apply=%sum
+  %rs-start = f32[32]{0} reduce-scatter-start(%y)
+  %a2a = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-to-all(%u, %v)
+  %cp = u32[128]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ag2-start = bf16[64]{0} all-gather-start(%z)
+  %ag2-done = bf16[64]{0} all-gather-done(%ag2-start)
+  %not-a-collective = f32[999]{0} add(%a, %b)
+}
+"""
+
+
+def test_parse_collective_bytes():
+    out = roofline.parse_collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 256 * 1024 * 2 + 64 * 2   # ag + ag2-start
+    assert out["all-reduce"] == 512 * 4
+    assert out["reduce-scatter"] == 32 * 4
+    assert out["all-to-all"] == 2 * 8 * 4 * 4
+    assert out["collective-permute"] == 128 * 4
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_parse_ignores_done_ops():
+    # the -done op must not double count its -start
+    text = "%d = bf16[64]{0} all-gather-done(%s)\n"
+    assert roofline.parse_collective_bytes(text)["all-gather"] == 0
+
+
+def test_extrapolate_layers_linear():
+    c1 = {"flops": 10.0, "bytes": 100.0, "coll": {"all-gather": 5,
+                                                  "total": 5}}
+    c2 = {"flops": 14.0, "bytes": 130.0, "coll": {"all-gather": 8,
+                                                  "total": 8}}
+    full = {"flops": 0.0, "bytes": 0.0, "coll": {"all-gather": 0,
+                                                 "total": 0}}
+    out = roofline.extrapolate_layers(full, c1, c2, n_layers=11)
+    assert out["flops"] == 10.0 + 10 * 4.0
+    assert out["bytes"] == 100.0 + 10 * 30.0
+    assert out["coll"]["all-gather"] == 5 + 10 * 3
+
+
+def test_count_params_no_overflow():
+    cfg = get_config("mistral-large-123b")
+    n = roofline.count_params(cfg)
+    assert n["total"] > 100e9          # ~123B, must not wrap negative
+    assert n["active"] == n["total"]   # dense
+
+
+def test_count_params_moe_active():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    n = roofline.count_params(cfg)
+    assert n["total"] > 25e9
+    assert n["active"] < 0.2 * n["total"]   # 8 of 128 experts
+
+
+def test_model_flops_kinds():
+    cfg = get_config("glm4-9b")
+    train = roofline.model_flops(cfg, SHAPES["train_4k"])
+    prefill = roofline.model_flops(cfg, SHAPES["prefill_32k"])
+    decode = roofline.model_flops(cfg, SHAPES["decode_32k"])
+    assert train == pytest.approx(3 * prefill, rel=1e-6)  # 6ND vs 2ND
+    assert decode < prefill / 1000                        # 1 tok vs 32k

@@ -1,0 +1,113 @@
+"""input_specs / sharding-rule unit tests (no compilation, no devices)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.shapes import adapt_config, input_specs
+from repro.models.sharding import cache_spec, data_spec, param_spec
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_exist_for_all_pairs(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    assert "tokens" in specs
+    if shape.kind == "train":
+        assert "labels" in specs
+        if cfg.family == "vlm":
+            assert specs["patch_embeds"].shape[1] == cfg.n_patches
+            # text tokens + patches = assigned seq_len
+            assert (specs["tokens"].shape[1] + cfg.n_patches
+                    == shape.seq_len)
+        elif cfg.family == "audio":
+            assert specs["tokens"].shape == (shape.global_batch,
+                                             shape.seq_len,
+                                             cfg.n_codebooks)
+        else:
+            assert specs["tokens"].shape == (shape.global_batch,
+                                             shape.seq_len)
+    else:
+        if shape.kind == "decode":
+            assert "cache" in specs
+            assert specs["tokens"].shape[1] == 1
+
+
+def test_long_500k_gets_sliding_window_for_attention_archs():
+    shape = SHAPES["long_500k"]
+    for arch in ["glm4-9b", "mistral-large-123b", "qwen3-moe-30b-a3b"]:
+        cfg = adapt_config(get_config(arch), shape)
+        assert cfg.sliding_window == 4096
+    # ssm/hybrid stay native
+    assert adapt_config(get_config("xlstm-125m"), shape).sliding_window == 0
+
+
+def test_long_500k_cache_is_bounded():
+    """The 500k decode cache must NOT scale with seq_len for any arch."""
+    shape = SHAPES["long_500k"]
+    for arch in ARCHS:
+        cfg = adapt_config(get_config(arch), shape)
+        specs = input_specs(cfg, shape)
+        leaves = jax.tree_util.tree_leaves(specs["cache"])
+        total = sum(int(jnp.prod(jnp.array(l.shape))) * l.dtype.itemsize
+                    for l in leaves)
+        # < 40 GiB global (i.e. window- or state-bounded, not 500k-bounded)
+        assert total < 40 * 2**30, (arch, total)
+
+
+class _FakeMesh:
+    """Minimal mesh stand-in: .shape mapping axis->size."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+MESH_MP = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_param_spec_rules():
+    assert param_spec(("layers", "attn", "w_q"), (88, 4096, 4096),
+                      MESH) == P(None, None, "model")
+    assert param_spec(("layers", "attn", "w_o"), (88, 4096, 4096),
+                      MESH) == P(None, "model", None)
+    assert param_spec(("layers", "moe", "w_gate"), (48, 128, 2048, 768),
+                      MESH) == P(None, "model", None, None)
+    assert param_spec(("norm_f",), (4096,), MESH) == P(None)
+    assert param_spec(("embed",), (151552, 4096), MESH) == P("model", None)
+
+
+def test_param_spec_divisibility_fallback():
+    # 24 heads * 64 dh = 1536 divisible; but a 23-dim axis is not
+    assert param_spec(("layers", "attn", "w_q"), (2, 64, 23),
+                      MESH) == P(None, None, None)
+
+
+def test_param_spec_fsdp_adds_data_axis():
+    s = param_spec(("layers", "attn", "w_q"), (88, 4096, 4096), MESH,
+                   fsdp=True)
+    assert s == P(None, "data", "model")
+
+
+def test_data_spec_batch_rules():
+    assert data_spec((256, 4096), MESH) == P("data", None)
+    assert data_spec((256, 4096), MESH_MP) == P(("pod", "data"), None)
+    # batch=1 not divisible -> replicated
+    assert data_spec((1, 524288), MESH) == P(None, None)
+    # batch=32 divisible by pod*data=32
+    assert data_spec((32, 128), MESH_MP) == P(("pod", "data"), None)
+
+
+def test_cache_spec_rules():
+    # (L, B, S, Hkv, dh): kv=8 not div by 16 -> dh=128 sharded
+    assert cache_spec(("attn", "k"), (88, 128, 32768, 8, 128), MESH) \
+        == P(None, "data", None, None, "model")
+    # kv=32 divisible -> heads sharded
+    assert cache_spec(("attn", "k"), (13, 128, 32768, 32, 112), MESH) \
+        == P(None, "data", None, "model", None)
+    # ssm state (L, B, H, N, dh): H on model
+    assert cache_spec(("ssm", "state"), (81, 128, 112, 64, 64), MESH) \
+        == P(None, "data", "model", None, None)

@@ -1,0 +1,78 @@
+"""End-to-end system behaviour: full protocol on synthetic data reproduces
+the paper's qualitative claims (MRSE ordering, Byzantine robustness)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ProtocolConfig
+from repro.core import DPQNProtocol, get_problem
+from repro.data.synthetic import make_shards, target_theta
+
+M, N, P = 40, 1000, 8
+
+
+@pytest.fixture(scope="module")
+def shards():
+    return make_shards(jax.random.PRNGKey(0), "logistic", M, N, P)
+
+
+def _err(v):
+    return float(jnp.linalg.norm(v - target_theta(P)))
+
+
+def test_mrse_ordering_cq_os_qn(shards):
+    """Figs 1-5: theta_cq > theta_os >= theta_qn in MRSE (on average)."""
+    X, y = shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    prob = get_problem("logistic")
+    e_cq = e_os = e_qn = 0.0
+    reps = 5
+    for k in range(reps):
+        r = DPQNProtocol(prob, cfg).run(jax.random.PRNGKey(100 + k), X, y)
+        e_cq += _err(r.theta_cq) / reps
+        e_os += _err(r.theta_os) / reps
+        e_qn += _err(r.theta_qn) / reps
+    assert e_os < e_cq
+    assert e_qn < e_cq
+    # qn should not be (much) worse than os
+    assert e_qn < 1.25 * e_os
+
+
+def test_byzantine_robustness_end_to_end(shards):
+    """alpha=10% scaling attack barely moves the DCQ-aggregated estimator."""
+    X, y = shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    prob = get_problem("logistic")
+    mask = jnp.zeros((M,), bool).at[:M // 10].set(True)
+    r_clean = DPQNProtocol(prob, cfg).run(jax.random.PRNGKey(7), X, y)
+    r_byz = DPQNProtocol(prob, cfg).run(jax.random.PRNGKey(7), X, y,
+                                        byz_mask=mask)
+    assert _err(r_byz.theta_qn) < 2.0 * _err(r_clean.theta_qn) + 0.05
+
+
+def test_mean_aggregation_destroyed_by_byzantine(shards):
+    """The non-robust mean aggregator is wrecked by the same attack."""
+    X, y = shards
+    prob = get_problem("logistic")
+    mask = jnp.zeros((M,), bool).at[:M // 10].set(True)
+    cfg_mean = ProtocolConfig(eps=30.0, delta=0.05, aggregator="mean",
+                              noiseless=True)
+    cfg_dcq = ProtocolConfig(eps=30.0, delta=0.05, aggregator="dcq",
+                             noiseless=True)
+    r_mean = DPQNProtocol(prob, cfg_mean).run(jax.random.PRNGKey(8), X, y,
+                                              byz_mask=mask)
+    r_dcq = DPQNProtocol(prob, cfg_dcq).run(jax.random.PRNGKey(8), X, y,
+                                            byz_mask=mask)
+    assert _err(r_dcq.theta_qn) < _err(r_mean.theta_qn)
+
+
+def test_privacy_accounting_five_rounds(shards):
+    X, y = shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    r = DPQNProtocol(get_problem("logistic"), cfg).run(
+        jax.random.PRNGKey(9), X, y)
+    eb, db = r.accountant.total_basic()
+    assert abs(eb - 30.0) < 1e-6
+    assert abs(db - 0.05) < 1e-6
+    ea, _ = r.accountant.total_advanced()
+    assert ea <= eb + 1e-9
