@@ -1,0 +1,134 @@
+"""Cross-version jax compatibility shims for the mesh/sharding API.
+
+The repo targets the modern mesh API (``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``, ``jax.set_mesh`` / ``jax.sharding.use_mesh``,
+``jax.shard_map``), but must also run on jax 0.4.x where none of those
+exist yet. This module provides the missing pieces:
+
+  * ``AxisType`` — re-export, or a stand-in enum on old jax;
+  * ``make_mesh`` — accepts (and, on old jax, swallows) ``axis_types``;
+  * ``set_mesh`` / ``use_mesh`` — context managers that fall back to the
+    classic ``with mesh:`` physical-mesh context;
+  * ``shard_map`` — ``jax.shard_map`` or the 0.4.x experimental location.
+
+``install()`` (called from ``repro.__init__``) additionally fills the gaps
+in the ``jax`` namespace itself — never overriding anything that exists —
+so scripts and tests written against the modern spelling
+(``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``) run unchanged
+on the pinned 0.4.x toolchain.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+# ------------------------------------------------------------- AxisType
+
+try:
+    from jax.sharding import AxisType            # jax >= 0.5
+except ImportError:                              # pragma: no cover - new jax
+    class AxisType(enum.Enum):
+        """Stand-in for jax.sharding.AxisType on jax 0.4.x, where every
+        mesh axis is implicitly Auto (GSPMD-propagated)."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+# ------------------------------------------------------------- make_mesh
+
+_native_make_mesh = jax.make_mesh
+_HAS_AXIS_TYPES = "axis_types" in inspect.signature(_native_make_mesh).parameters
+
+
+@functools.wraps(_native_make_mesh)
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` accepting ``axis_types`` on every jax version.
+
+    On jax 0.4.x only ``AxisType.Auto`` is emulated (every axis there is
+    implicitly Auto/GSPMD); requesting Explicit or Manual axes raises
+    rather than silently changing sharding semantics.
+    """
+    if _HAS_AXIS_TYPES:
+        return _native_make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, devices=devices)
+    if axis_types is not None and any(t is not None and t != AxisType.Auto
+                                      for t in axis_types):
+        raise NotImplementedError(
+            f"jax {jax.__version__} only supports Auto mesh axes; "
+            f"got axis_types={axis_types}")
+    return _native_make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+# ------------------------------------------------------- mesh contexts
+
+if hasattr(jax.sharding, "use_mesh"):
+    use_mesh = jax.sharding.use_mesh
+else:
+    @contextlib.contextmanager
+    def use_mesh(mesh: jax.sharding.Mesh):
+        """Fallback: the classic physical-mesh context (``with mesh:``)."""
+        with mesh:
+            yield mesh
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    def set_mesh(mesh: jax.sharding.Mesh):
+        """Fallback for ``jax.set_mesh``: usable as ``with set_mesh(m):``."""
+        return use_mesh(mesh)
+
+
+# ------------------------------------------------------------ shard_map
+
+if hasattr(jax, "shard_map"):
+    _native_shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _native_shard_map
+_SM_PARAMS = inspect.signature(_native_shard_map).parameters
+
+
+@functools.wraps(_native_shard_map)
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=None, **kwargs):
+    """``shard_map`` with the replication-check kwarg normalised: newer
+    jax renamed ``check_rep`` to ``check_vma``; pass whichever exists."""
+    if check_rep is not None:
+        if "check_rep" in _SM_PARAMS:
+            kwargs["check_rep"] = check_rep
+        elif "check_vma" in _SM_PARAMS:
+            kwargs["check_vma"] = check_rep
+    return _native_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+
+
+# -------------------------------------------------------------- install
+
+_installed = False
+
+
+def install() -> None:
+    """Fill missing mesh-API attributes on the jax namespace (idempotent).
+
+    Only ever adds what is absent; on a modern jax this is a no-op.
+    """
+    global _installed
+    if _installed:
+        return
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not _HAS_AXIS_TYPES:
+        jax.make_mesh = make_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    if not hasattr(jax.sharding, "use_mesh"):
+        jax.sharding.use_mesh = use_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    _installed = True

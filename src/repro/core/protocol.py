@@ -3,9 +3,11 @@
 Single-host reference implementation: machines are a leading axis, local
 computations are vmapped, "transmissions" are explicit arrays so Byzantine
 corruption and DP noise are applied exactly where the paper applies them
-(on the wire). The shard_map SPMD version (dist/sharded_protocol.py) reuses
-the same round functions and must agree bit-for-bit on the aggregates up to
-collective reduction order (tested in tests/test_dist.py).
+(on the wire). Every machine-local computation is routed through a
+pluggable ``machine_map`` (default: jax.vmap); the shard_map SPMD version
+(dist/sharded_protocol.py) swaps in a mesh-sharded map and reuses all the
+central math below verbatim, so the two agree up to collective reduction
+order (tested in tests/test_dist.py).
 
 Round structure (five p-vector transmissions):
   R1  theta_hat_j + b1          -> DCQ -> theta_cq            (4.2)/(4.4)
@@ -34,6 +36,13 @@ from repro.core.losses import MEstimationProblem
 from repro.core.robust_agg import aggregate
 
 
+def vmap_machines(fn, *machine_args, bcast=()):
+    """Default machine map: vmap ``fn`` over the leading machine axis of
+    ``machine_args``; ``bcast`` entries are passed whole to every machine.
+    dist/sharded_protocol.py provides the mesh-sharded drop-in."""
+    return jax.vmap(lambda *ma: fn(*ma, *bcast))(*machine_args)
+
+
 @dataclasses.dataclass
 class ProtocolResult:
     theta_cq: jnp.ndarray          # initial DCQ estimator (4.4)
@@ -48,9 +57,13 @@ class DPQNProtocol:
     """Paper Algorithm 1. ``run`` consumes pre-sharded data:
     X: (m+1, n, p), y: (m+1, n); machine 0 is the central processor."""
 
-    def __init__(self, problem: MEstimationProblem, cfg: ProtocolConfig):
+    def __init__(self, problem: MEstimationProblem, cfg: ProtocolConfig,
+                 machine_map=None):
         self.problem = problem
         self.cfg = cfg
+        # machine_map(fn, *machine_args, bcast=()) runs fn once per machine;
+        # the SPMD protocol passes a shard_map-based implementation.
+        self._mmap = machine_map or vmap_machines
 
     # -- noise helpers -----------------------------------------------------
     def _round_budget(self):
@@ -90,16 +103,17 @@ class DPQNProtocol:
         Xc, yc = X[0], y[0]  # center's own shard
 
         # ---- Round 1: local M-estimators -> theta_cq ----------------------
-        theta_local = jax.vmap(
-            lambda Xi, yi: local.newton_solve(prob, theta0, Xi, yi,
-                                              steps=cfg.newton_steps))(X, y)
+        theta_local = self._mmap(
+            lambda Xi, yi, t0: local.newton_solve(prob, t0, Xi, yi,
+                                                  steps=cfg.newton_steps),
+            X, y, bcast=(theta0,))
         # lambda_s (Assumption 7.3): fixed constant, or calibrated by EACH
         # machine from its local Hessian spectrum (local data only => no
         # extra transmission, no extra privacy cost). The center uses its
         # own lambda_0 when reconstructing the noise variance.
         if cfg.lambda_s is None:
-            lam_j = jax.vmap(lambda Xi, yi, ti: jnp.clip(jnp.linalg.eigvalsh(
-                prob.hessian(ti, Xi, yi))[0], 1e-3, None))(X, y, theta_local)
+            lam_j = self._mmap(lambda Xi, yi, ti: jnp.clip(jnp.linalg.eigvalsh(
+                prob.hessian(ti, Xi, yi))[0], 1e-3, None), X, y, theta_local)
         else:
             lam_j = jnp.full((m_plus_1,), cfg.lambda_s, X.dtype)
         s1_base = dp.s1_theta(p, n, cfg.gammas[0], eps_r, delta_r,
@@ -130,7 +144,8 @@ class DPQNProtocol:
             theta_cq = theta_cq_override
 
         # ---- Round 2: gradients at theta_cq -> g_cq -----------------------
-        grads = jax.vmap(lambda Xi, yi: prob.grad(theta_cq, Xi, yi))(X, y)
+        grads = self._mmap(lambda Xi, yi, t: prob.grad(t, Xi, yi),
+                           X, y, bcast=(theta_cq,))
         s2 = dp.s2_grad(p, n, cfg.gammas[1], eps_r, delta_r, cfg.tail)
         grads_dp = self._noise(keys[2], grads, s2)
         grads_dp = corrupt(grads_dp, keys[3])
@@ -143,6 +158,8 @@ class DPQNProtocol:
         else:
             # §4.3: node machines transmit DP variances; center medians them.
             s6 = dp.s6_variance(p, n, 1.0, eps_r, delta_r)
+            # node machines only (m of m+1 rows): stays a plain vmap — the
+            # slice does not divide a machine mesh evenly.
             node_gvar = jax.vmap(
                 lambda Xi, yi: prob.grad_variance(theta_cq, Xi, yi))(X[1:], y[1:])
             node_gvar = self._noise(keys[4], node_gvar, s6)
@@ -155,10 +172,10 @@ class DPQNProtocol:
         g_cq = _agg_for(cfg, "grad", grads_dp, scale2)
 
         # ---- Round 3: Newton directions -> theta_os -----------------------
-        def newton_dir(Xi, yi):
-            h = prob.hessian(theta_cq, Xi, yi) + 1e-9 * jnp.eye(p, dtype=X.dtype)
-            return jnp.linalg.solve(h, g_cq)
-        dirs = jax.vmap(newton_dir)(X, y)
+        def newton_dir(Xi, yi, t_cq, g):
+            h = prob.hessian(t_cq, Xi, yi) + 1e-9 * jnp.eye(p, dtype=X.dtype)
+            return jnp.linalg.solve(h, g)
+        dirs = self._mmap(newton_dir, X, y, bcast=(theta_cq, g_cq))
         dir_norm = jnp.linalg.norm(dirs, axis=1)          # per machine (Thm 4.5(3))
         s3 = (0.0 if cfg.noiseless else
               dp.s3_newton_dir(p, n, cfg.gammas[2], eps_r, delta_r,
@@ -180,8 +197,9 @@ class DPQNProtocol:
         theta_os = theta_cq - H1
 
         # ---- Round 4: gradient differences -> gdiff_cq, g_os --------------
-        gdiff = jax.vmap(lambda Xi, yi: prob.grad(theta_os, Xi, yi)
-                         - prob.grad(theta_cq, Xi, yi))(X, y)
+        gdiff = self._mmap(lambda Xi, yi, t_os, t_cq: prob.grad(t_os, Xi, yi)
+                           - prob.grad(t_cq, Xi, yi),
+                           X, y, bcast=(theta_os, theta_cq))
         step = theta_os - theta_cq
         s4 = (0.0 if cfg.noiseless else
               dp.s4_grad_diff(p, n, cfg.gammas[3], eps_r, delta_r, 1.0,
@@ -211,11 +229,13 @@ class DPQNProtocol:
         # ---- Round 5: BFGS directions -> theta_qn --------------------------
         v = make_v(s=step, y=gdiff_cq)
 
-        def bfgs_dir(Xi, yi):
-            h = prob.hessian(theta_cq, Xi, yi) + 1e-9 * jnp.eye(p, dtype=X.dtype)
-            hinv_vg = jnp.linalg.solve(h, v(g_os, transpose=False))
-            return v(hinv_vg, transpose=True)              # (4.15) machine part
-        h3 = jax.vmap(bfgs_dir)(X, y)
+        def bfgs_dir(Xi, yi, t_cq, vs, vy, vrho, g):
+            vop = VOp(s=vs, y=vy, rho=vrho)
+            h = prob.hessian(t_cq, Xi, yi) + 1e-9 * jnp.eye(p, dtype=X.dtype)
+            hinv_vg = jnp.linalg.solve(h, vop(g, transpose=False))
+            return vop(hinv_vg, transpose=True)            # (4.15) machine part
+        h3 = self._mmap(bfgs_dir, X, y,
+                        bcast=(theta_cq, v.s, v.y, v.rho, g_os))
         s5 = (0.0 if cfg.noiseless else
               dp.s5_bfgs_dir(p, n, cfg.gammas[4], eps_r, delta_r, 1.0, 1.0,
                              cfg.tail))

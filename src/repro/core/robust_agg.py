@@ -2,8 +2,10 @@
 
 Coordinate-wise median (Yin et al. 2018), trimmed mean (Yin et al. 2018/19),
 geometric median (Chen et al. 2017), and the non-robust mean. All operate
-over a leading machine axis and are usable both in the convex protocol and
-as gradient aggregators for training (dist/grad_agg.py).
+over a leading machine axis and serve two consumers: the convex protocol
+(core/protocol.py) and the training-time gradient aggregator
+(repro.dist.grad_agg.aggregate_machine_axis dispatches here for every
+method except its MAD-scaled DCQ path).
 """
 from __future__ import annotations
 
@@ -26,7 +28,6 @@ def trimmed_mean_agg(values, beta: float = 0.2, axis: int = 0):
     largest entries per coordinate. Paper: beta >= 2*alpha_n; ARE = 1-beta."""
     values = jnp.moveaxis(values, axis, 0)
     m = values.shape[0]
-    g = int(jnp.floor(beta * m / 2)) if isinstance(m, int) else 0
     g = max(int(beta * m / 2), 0)
     srt = jnp.sort(values, axis=0)
     if 2 * g >= m:

@@ -1,0 +1,23 @@
+"""Distribution layer: the paper's robust DP aggregation as infrastructure.
+
+Three pieces, layered bottom-up:
+
+  * ``grad_agg``          — per-machine DP noise, Byzantine corruption and
+                            robust aggregation over a leading machine axis
+                            (pytree-of-gradients API used by the trainer);
+  * ``collectives``       — the same aggregation executed SPMD on a
+                            ``Mesh``-sharded machine axis (shard_map +
+                            all-gather), matching the replicated path;
+  * ``sharded_protocol``  — Algorithm 1 (core/protocol.py) run SPMD with
+                            one machine's shard per device, reusing the
+                            sequential protocol's central math verbatim.
+"""
+from repro.dist.grad_agg import (GradAggConfig, add_dp_noise,
+                                 aggregate_machine_axis, corrupt_machines,
+                                 robust_aggregate)
+from repro.dist.collectives import sharded_aggregate_leaf
+from repro.dist.sharded_protocol import run_sharded
+
+__all__ = ["GradAggConfig", "add_dp_noise", "aggregate_machine_axis",
+           "corrupt_machines", "robust_aggregate",
+           "sharded_aggregate_leaf", "run_sharded"]

@@ -1,0 +1,63 @@
+"""SPMD robust aggregation over a Mesh-sharded machine axis.
+
+``grad_agg.aggregate_machine_axis`` is pure math over a local (m, ...)
+array; this module runs the same math when the machine axis is sharded
+across devices. The schedule is gather-then-reduce:
+
+    shard_map over the machine axis
+      -> lax.all_gather the machine rows (tiled)     # the only collective
+        -> aggregate_machine_axis on the full axis   # identical math
+
+Every device then holds the identical aggregate, so the output is
+replicated over the machine axis while any *payload* sharding (e.g. a
+"model" axis on the parameter dims) is preserved — the robust aggregators
+(median / trimmed / DCQ) are coordinate-wise, so payload shards never
+need to communicate.
+
+The replicated reference and this path agree to fp32 tolerance (1e-4 in
+tests/test_dist.py): the post-gather reduction is the same program, the
+only difference is the gather's concatenation order, which is the machine
+order by construction (tiled all-gather).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.dist.grad_agg import GradAggConfig, aggregate_machine_axis
+
+
+def sharded_aggregate_leaf(values: jax.Array, cfg: GradAggConfig,
+                           mesh: Mesh, spec: P) -> jax.Array:
+    """Aggregate one (m, ...) leaf whose machine axis is sharded.
+
+    Args:
+      values: array with the machine axis leading; sharded as ``spec``.
+      cfg: aggregation config (method/trim/K as in grad_agg).
+      mesh: the device mesh carrying ``spec``'s axis names.
+      spec: PartitionSpec of ``values``; ``spec[0]`` names the mesh
+        axis (or axes) the machine dimension is sharded over, the rest
+        describes payload sharding and is preserved on the output.
+
+    Returns: the aggregate, shape ``values.shape[1:]``, replicated over
+    the machine axis and sharded as ``spec[1:]`` on the payload dims.
+    """
+    machine_axis = spec[0] if len(spec) else None
+    if machine_axis is None:
+        # machine axis replicated: nothing to gather, aggregate in place
+        return aggregate_machine_axis(values, cfg)
+    rest = P(*spec[1:])
+    if cfg.method == "geomedian" and any(s is not None for s in rest):
+        # Weiszfeld weights couple all coordinates; a payload shard would
+        # compute a different (wrong) median than the replicated path.
+        raise ValueError(
+            "geomedian is not coordinate-wise: payload dims must be "
+            f"replicated in the sharded strategy, got spec {spec}")
+
+    def gather_and_reduce(x):
+        full = jax.lax.all_gather(x, machine_axis, axis=0, tiled=True)
+        return aggregate_machine_axis(full, cfg)
+
+    return shard_map(gather_and_reduce, mesh=mesh, in_specs=(spec,),
+                     out_specs=rest, check_rep=False)(values)

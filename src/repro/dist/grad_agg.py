@@ -1,0 +1,131 @@
+"""Gradient-level robust DP aggregation over a leading machine axis.
+
+The paper's wire model (§4) applied to training: every leaf of a gradient
+pytree has shape ``(m, ...)`` — one slice per node machine. A step is
+
+    corrupt_machines (Byzantine attack on the transmitted message)
+      -> add_dp_noise (per-machine Gaussian mechanism)
+        -> aggregate_machine_axis (mean / median / trimmed mean / DCQ)
+
+composed by ``robust_aggregate``. With ``method="mean"``, ``dp_sigma=0``
+and ``attack="none"`` this reduces exactly to data-parallel gradient
+averaging (asserted in tests/test_train.py).
+
+The DCQ path has no oracle scale (unlike the convex protocol, which
+transmits variance estimates), so it uses the MAD-calibrated variant:
+median anchor, 1.4826*MAD scale, composite-quantile correction. On TPU it
+runs through the Pallas bisection kernel (kernels/dcq.py); elsewhere it
+uses the pure-jnp oracle (kernels/dcq_ref.py) — same math, tested to
+agree in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import byzantine as byz
+from repro.core import robust_agg
+from repro.kernels.dcq import dcq_pallas
+from repro.kernels.dcq_ref import dcq_mad_reference
+
+# launcher-friendly aliases for the attack names in core/byzantine.py
+_ATTACK_ALIASES = {"sign": "signflip", "noise": "gauss"}
+
+
+@dataclasses.dataclass(frozen=True)
+class GradAggConfig:
+    """Configuration of the attack -> noise -> aggregation pipeline."""
+    method: str = "dcq"            # mean | median | trimmed | dcq
+    dp_sigma: float = 0.0          # per-machine Gaussian mechanism s.d.
+    attack: str = "none"           # none | scale | signflip | gauss | random
+    attack_factor: float = -3.0
+    trim_beta: float = 0.2         # trimmed-mean fraction
+    K: int = 10                    # DCQ composite-quantile levels
+    strategy: str = "replicated"   # replicated | sharded (collectives.py)
+    # None = auto: Pallas kernel on TPU, jnp reference elsewhere.
+    use_pallas: Optional[bool] = None
+
+
+def add_dp_noise(grads: Any, sigma: float, key: jax.Array) -> Any:
+    """Gaussian mechanism per machine: every leaf row is an independent
+    draw (machines do not share randomness). ``sigma == 0`` is an exact
+    no-op — the inputs are returned unchanged."""
+    if sigma == 0.0:
+        return grads
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [leaf + jnp.asarray(sigma, leaf.dtype)
+             * jax.random.normal(k, leaf.shape, leaf.dtype)
+             for leaf, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, noisy)
+
+
+def corrupt_machines(grads: Any, byz_mask: Optional[jnp.ndarray],
+                     cfg: GradAggConfig, key: jax.Array) -> Any:
+    """Apply the configured Byzantine attack to the machine rows selected
+    by ``byz_mask`` on every leaf. ``mask=None``, an all-False mask, or
+    ``attack="none"`` leave the pytree unchanged."""
+    if byz_mask is None or cfg.attack == "none":
+        return grads
+    attack = _ATTACK_ALIASES.get(cfg.attack, cfg.attack)
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = [byz.apply_attack(leaf, byz_mask, attack=attack,
+                            factor=cfg.attack_factor, key=k)
+           for leaf, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _dcq_mad(values: jnp.ndarray, cfg: GradAggConfig) -> jnp.ndarray:
+    """MAD-scaled DCQ of one (m, ...) leaf -> (...). Flattens the payload
+    to (m, p) for the kernels, restores shape/dtype after."""
+    m = values.shape[0]
+    flat = values.reshape(m, -1)
+    use_pallas = (cfg.use_pallas if cfg.use_pallas is not None
+                  else jax.default_backend() == "tpu")
+    if use_pallas:
+        out = dcq_pallas(flat.astype(jnp.float32), K=cfg.K,
+                         interpret=jax.default_backend() != "tpu")
+    else:
+        out = dcq_mad_reference(flat, K=cfg.K)
+    return out.reshape(values.shape[1:]).astype(values.dtype)
+
+
+def aggregate_machine_axis(values: jnp.ndarray,
+                           cfg: GradAggConfig) -> jnp.ndarray:
+    """Aggregate one array over its leading machine axis: (m, ...) -> (...)."""
+    if values.ndim < 1 or values.shape[0] < 1:
+        raise ValueError(f"need a leading machine axis, got {values.shape}")
+    if cfg.method in ("mean", "median", "trimmed", "geomedian"):
+        return robust_agg.aggregate(values, method=cfg.method,
+                                    trim_beta=cfg.trim_beta, axis=0)
+    if cfg.method == "dcq":
+        return _dcq_mad(values, cfg)
+    raise ValueError(f"unknown aggregation method {cfg.method!r}")
+
+
+def robust_aggregate(grads: Any, cfg: GradAggConfig, key: jax.Array,
+                     byz_mask: Optional[jnp.ndarray] = None, *,
+                     mesh=None, machine_specs=None) -> Any:
+    """Attack -> DP noise -> robust aggregation over a gradient pytree.
+
+    Every leaf must carry the machine axis first. With
+    ``cfg.strategy == "sharded"`` and a mesh + per-leaf PartitionSpecs
+    (machine axis first), aggregation runs SPMD via
+    ``collectives.sharded_aggregate_leaf``; otherwise each leaf is
+    aggregated where it lives (GSPMD is free to all-gather).
+    """
+    k_attack, k_noise = jax.random.split(key)
+    grads = corrupt_machines(grads, byz_mask, cfg, k_attack)
+    grads = add_dp_noise(grads, cfg.dp_sigma, k_noise)
+    if cfg.strategy == "sharded" and mesh is not None \
+            and machine_specs is not None:
+        from repro.dist.collectives import sharded_aggregate_leaf
+        return jax.tree_util.tree_map(
+            lambda g, spec: sharded_aggregate_leaf(g, cfg, mesh, spec),
+            grads, machine_specs)
+    return jax.tree_util.tree_map(
+        lambda g: aggregate_machine_axis(g, cfg), grads)

@@ -1,9 +1,11 @@
 """Pure-jnp oracle for the DCQ robust-aggregation kernel.
 
-Matches dist/grad_agg.py's DCQ path: coordinate-wise median over the
-machine axis, MAD*1.4826 scale, composite-quantile correction with K
-standard-normal knots. The kernel (kernels/dcq.py) must agree to fp32
-tolerance for every (m, p) shape/dtype in the sweep tests.
+Implements the MAD-scaled DCQ used by repro.dist.grad_agg (method="dcq"):
+coordinate-wise median over the machine axis, MAD*1.4826 scale,
+composite-quantile correction with K standard-normal knots. grad_agg
+calls this oracle off-TPU and the Pallas kernel (kernels/dcq.py) on TPU;
+the two must agree to fp32 tolerance for every (m, p) shape/dtype in the
+sweep tests (tests/test_kernels.py).
 """
 from __future__ import annotations
 

@@ -8,27 +8,29 @@ layout; the multi-pod config stacks a leading "pod" axis (2, 16, 16).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(model: int = 1) -> Mesh:
     """Whatever devices exist locally, data-major (CPU tests/examples)."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 def make_machine_mesh(m: int) -> Mesh:
     """1-D mesh for the SPMD protocol (one device per machine)."""
-    return jax.make_mesh((m,), ("machines",), axis_types=(AxisType.Auto,))
+    return make_mesh((m,), ("machines",), axis_types=(AxisType.Auto,))
 
 
 # roofline hardware constants (TPU v5e, per chip)

@@ -2,9 +2,12 @@
 forced host devices (jax locks the device count at first init, and the
 main test process must keep seeing 1 device)."""
 import json
+import os
 import subprocess
 import sys
 import textwrap
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +27,7 @@ def _run_sub(code: str, devices: int = 8) -> str:
            f"import sys; sys.path.insert(0, 'src')\n")
     out = subprocess.run([sys.executable, "-c", pre + textwrap.dedent(code)],
                          capture_output=True, text=True, timeout=600,
-                         cwd="/root/repo")
+                         cwd=_REPO)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
 

@@ -1,0 +1,51 @@
+"""Edge cases of the dist layer not covered by the seed contracts:
+degenerate trims, no-op masks, and the sigma=0 exact-identity path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.robust_agg import trimmed_mean_agg
+from repro.dist.grad_agg import (GradAggConfig, add_dp_noise,
+                                 corrupt_machines)
+
+
+def test_trimmed_mean_zero_rows_trimmed_equals_mean():
+    """A trim fraction that floors to zero rows per side must reduce to
+    the plain mean, not drop anything."""
+    v = jax.random.normal(jax.random.PRNGKey(0), (8, 5))
+    out = trimmed_mean_agg(v, beta=0.05)          # int(0.05*8/2) == 0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v.mean(0)),
+                               atol=1e-6)
+
+
+def test_trimmed_mean_full_trim_rejected():
+    v = jnp.ones((4, 3))
+    with pytest.raises(ValueError, match="too large"):
+        trimmed_mean_agg(v, beta=1.0)
+
+
+def test_corrupt_machines_all_false_mask_is_noop():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (6, 4, 2)),
+         "b": jax.random.normal(jax.random.PRNGKey(2), (6, 4))}
+    mask = jnp.zeros((6,), bool)
+    cfg = GradAggConfig(method="dcq", attack="scale", attack_factor=-3.0)
+    out = corrupt_machines(g, mask, cfg, jax.random.PRNGKey(3))
+    for k in g:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(g[k]))
+
+
+def test_corrupt_machines_attack_none_returns_input_object():
+    g = {"w": jnp.ones((4, 3))}
+    cfg = GradAggConfig(method="mean", attack="none")
+    mask = jnp.array([True, False, False, False])
+    assert corrupt_machines(g, mask, cfg, jax.random.PRNGKey(0)) is g
+
+
+def test_add_dp_noise_sigma_zero_exact_identity():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(4), (5, 7)),
+         "b": jnp.arange(10.0).reshape(5, 2)}
+    out = add_dp_noise(g, 0.0, jax.random.PRNGKey(5))
+    assert out is g                                # no recompute, no copy
+    for k in g:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(g[k]))

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.dcq import dcq_pallas
 from repro.kernels.dcq_ref import dcq_mad_reference

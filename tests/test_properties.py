@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dp
 from repro.core.bfgs import bfgs_inverse_update, make_v
