@@ -1,0 +1,97 @@
+"""Protocol engine throughput: eager per-op pipeline vs the compile-once
+jit(vmap) Monte-Carlo driver, on the mrse_vs_eps logistic setting.
+
+Writes BENCH_protocol.json at the repo root so the perf trajectory has a
+recorded datapoint:
+
+    PYTHONPATH=src python -m benchmarks.bench_protocol [--fast]
+
+Numbers recorded: wall-clock for ``reps`` eager ``DPQNProtocol.run`` calls,
+the compiled path's first call (incl. compile) and steady-state, and the
+replicate throughput of each. Acceptance: compiled steady-state >= 3x the
+eager path on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.configs.base import ProtocolConfig
+from repro.core import DPQNProtocol, get_problem
+from repro.data.synthetic import make_shards
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(_REPO_ROOT, "BENCH_protocol.json")
+
+
+def measure(reps: int = 20, m: int = 50, n: int = 1000, p: int = 10,
+            eps: float = 30.0, seed: int = 0) -> dict:
+    X, y = make_shards(jax.random.PRNGKey(seed), "logistic", m, n, p)
+    prob = get_problem("logistic")
+    cfg = ProtocolConfig(eps=eps, delta=0.05)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), reps)
+
+    # eager baseline: the pre-refactor execution model — one Python-driven
+    # per-op pipeline per replicate, no compilation, host sync every round
+    eager = DPQNProtocol(prob, cfg, jit=False)
+    t0 = time.perf_counter()
+    for r in range(reps):
+        eager.run(keys[r], X, y).theta_qn.block_until_ready()
+    t_eager = time.perf_counter() - t0
+
+    # compiled path: jit once, vmap over the replicate axis
+    proto = DPQNProtocol(prob, cfg)
+    t0 = time.perf_counter()
+    jax.block_until_ready(proto.run_monte_carlo(keys, X, y))
+    t_first = time.perf_counter() - t0           # includes compilation
+    t0 = time.perf_counter()
+    jax.block_until_ready(proto.run_monte_carlo(keys, X, y))
+    t_steady = time.perf_counter() - t0
+
+    return {
+        "setting": {"problem": "logistic", "m": m, "n": n, "p": p,
+                    "eps": eps, "reps": reps,
+                    "device": jax.devices()[0].platform,
+                    "jax": jax.__version__},
+        "eager_s": t_eager,
+        "compiled_first_call_s": t_first,
+        "compiled_steady_s": t_steady,
+        "speedup_steady": t_eager / t_steady,
+        "speedup_incl_compile": t_eager / t_first,
+        "replicates_per_s_eager": reps / t_eager,
+        "replicates_per_s_compiled": reps / t_steady,
+    }
+
+
+def main(fast: bool = False, out: str = BENCH_PATH) -> dict:
+    res = (measure(reps=8, m=20, n=400, p=6) if fast
+           else measure(reps=20, m=50, n=1000, p=10))
+    s = res["setting"]
+    print(f"== protocol engine: {s['reps']} replicates, logistic "
+          f"m={s['m']} n={s['n']} p={s['p']} ({s['device']}) ==")
+    print(f"eager {s['reps']}x run():        {res['eager_s']:8.2f} s "
+          f"({res['replicates_per_s_eager']:.2f} reps/s)")
+    print(f"compiled first (incl. jit): {res['compiled_first_call_s']:8.2f} s")
+    print(f"compiled steady-state:      {res['compiled_steady_s']:8.2f} s "
+          f"({res['replicates_per_s_compiled']:.2f} reps/s)")
+    print(f"speedup: {res['speedup_steady']:.1f}x steady, "
+          f"{res['speedup_incl_compile']:.1f}x incl. compile")
+    ok = res["speedup_steady"] >= 3.0
+    res["ok"] = ok
+    with open(out, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"wrote {out}")
+    print("PASS" if ok else "FAIL", "(compiled steady-state >= 3x eager)")
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced size (CI smoke)")
+    args = ap.parse_args()
+    main(fast=args.fast)

@@ -2,16 +2,23 @@
 for theta_cq / theta_os / theta_qn, normal and 10%-Byzantine, plus the
 noiseless quasi-Newton reference line.
 
+Replicates run through the compile-once engine: one jit(vmap) Monte-Carlo
+batch per eps point instead of an eager Python loop
+(DPQNProtocol.run_monte_carlo). Running this module as a script also emits
+BENCH_protocol.json (eager-vs-compiled wall-clock) via bench_protocol.
+
 Scaled down from the paper's N=2e6 to CPU size (the claims validated are
 ordering and saturation structure, not absolute values — EXPERIMENTS.md).
 """
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
-from repro.core import DPQNProtocol, get_problem
+from repro.core import DPQNProtocol, get_problem, monte_carlo_mrse
 from repro.data.synthetic import make_shards, target_theta
 
 
@@ -27,15 +34,12 @@ def run_curve(problem_name: str = "logistic", m: int = 50, n: int = 1000,
     for eps in eps_grid:
         cfg = ProtocolConfig(eps=float(eps), delta=0.05)
         proto = DPQNProtocol(prob, cfg)
-        errs = {"cq": [], "os": [], "qn": []}
-        for r in range(reps):
-            res = proto.run(jax.random.PRNGKey(1000 * eps + r), X, y,
-                            byz_mask=byz)
-            errs["cq"].append(float(jnp.linalg.norm(res.theta_cq - t)))
-            errs["os"].append(float(jnp.linalg.norm(res.theta_os - t)))
-            errs["qn"].append(float(jnp.linalg.norm(res.theta_qn - t)))
-        rows.append({"eps": eps,
-                     **{k: sum(v) / len(v) for k, v in errs.items()}})
+        keys = jnp.stack([jax.random.PRNGKey(1000 * eps + r)
+                          for r in range(reps)])
+        arrs = proto.run_monte_carlo(keys, X, y, byz_mask=byz)
+        errs = {name: monte_carlo_mrse(getattr(arrs, f"theta_{name}"), t)
+                for name in ("cq", "os", "qn")}
+        rows.append({"eps": eps, **errs})
     # noiseless reference
     res0 = DPQNProtocol(prob, ProtocolConfig(noiseless=True)).run(
         jax.random.PRNGKey(9), X, y, byz_mask=byz)
@@ -67,4 +71,13 @@ def main(fast: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced rep counts (CI smoke)")
+    ap.add_argument("--no-bench", action="store_true",
+                    help="skip the eager-vs-compiled timing pass")
+    args = ap.parse_args()
+    main(fast=args.fast)
+    if not args.no_bench:
+        from benchmarks import bench_protocol
+        bench_protocol.main(fast=args.fast)

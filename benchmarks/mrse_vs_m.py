@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
-from repro.core import DPQNProtocol, get_problem
+from repro.core import DPQNProtocol, get_problem, monte_carlo_mrse
 from repro.data.synthetic import make_shards, target_theta
 
 
@@ -26,11 +26,12 @@ def run(problem_name: str = "logistic", n: int = 500, p: int = 10,
         byz = jnp.zeros((m,), bool).at[:nb].set(True) if nb else None
         cfg = ProtocolConfig(eps=eps, delta=0.05)
         proto = DPQNProtocol(prob, cfg)
-        errs = [float(jnp.linalg.norm(
-            proto.run(jax.random.PRNGKey(10 * m + r), X, y,
-                      byz_mask=byz).theta_qn - t))
-            for r in range(reps)]
-        rows.append({"m": m, "mrse": sum(errs) / len(errs),
+        # one compiled Monte-Carlo batch per m (shapes differ across m, so
+        # each grid point traces once and the reps ride the vmap axis)
+        keys = jnp.stack([jax.random.PRNGKey(10 * m + r)
+                          for r in range(reps)])
+        arrs = proto.run_monte_carlo(keys, X, y, byz_mask=byz)
+        rows.append({"m": m, "mrse": monte_carlo_mrse(arrs.theta_qn, t),
                      "rate": math.sqrt(p / (m * n))})
     return rows
 

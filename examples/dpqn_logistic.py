@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
 from repro.core import DPQNProtocol, get_problem
+from repro.core import monte_carlo_mrse as mc_mrse
 from repro.core.baselines import gd_estimator, newton_estimator
 from repro.data.synthetic import make_shards, target_theta
 
@@ -41,19 +42,22 @@ def main(argv=None):
     for eps in [4, 10, 20, 30, 50]:
         cfg = ProtocolConfig(eps=float(eps), delta=0.05)
         proto = DPQNProtocol(prob, cfg)
-        runs = [proto.run(jax.random.PRNGKey(100 + r), X, y)
-                for r in range(args.reps)]
-        runs_b = [proto.run(jax.random.PRNGKey(200 + r), X, y,
-                            byz_mask=byz) for r in range(args.reps)]
+        # replicates batch through the compile-once Monte-Carlo engine
+        keys = jnp.stack([jax.random.PRNGKey(100 + r)
+                          for r in range(args.reps)])
+        keys_b = jnp.stack([jax.random.PRNGKey(200 + r)
+                            for r in range(args.reps)])
+        arrs = proto.run_monte_carlo(keys, X, y)
+        arrs_b = proto.run_monte_carlo(keys_b, X, y, byz_mask=byz)
         newt = [newton_estimator(prob, cfg, jax.random.PRNGKey(300 + r),
                                  X, y).theta for r in range(args.reps)]
         gd = [gd_estimator(prob, cfg, jax.random.PRNGKey(400 + r), X, y,
                            rounds=20, lr=2.0).theta
               for r in range(args.reps)]
-        print(f"{eps:5d} | {mrse([r.theta_cq for r in runs], t):7.4f} "
-              f"{mrse([r.theta_os for r in runs], t):7.4f} "
-              f"{mrse([r.theta_qn for r in runs], t):7.4f} | "
-              f"{mrse([r.theta_qn for r in runs_b], t):7.4f} | "
+        print(f"{eps:5d} | {mc_mrse(arrs.theta_cq, t):7.4f} "
+              f"{mc_mrse(arrs.theta_os, t):7.4f} "
+              f"{mc_mrse(arrs.theta_qn, t):7.4f} | "
+              f"{mc_mrse(arrs_b.theta_qn, t):7.4f} | "
               f"{mrse(newt, t):7.4f} {mrse(gd, t):7.4f}")
 
     # noiseless reference + untrusted center

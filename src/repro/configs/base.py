@@ -135,7 +135,11 @@ class ProtocolConfig:
     K: int = 10                  # composite-quantile levels (paper uses 10)
     eps: float = 30.0            # total privacy budget (split over 5 rounds)
     delta: float = 0.05
-    n_rounds: int = 5            # 5 vector transmissions
+    # Algorithm 1's fixed 5 vector rounds (validated — the per-transmission
+    # budget is derived from the ACTUAL transmission count, which adds a 6th
+    # "R2b var" DP transmission in untrusted-center mode; see
+    # core/protocol.py round_budget/transmission_names).
+    n_rounds: int = 5
     gammas: Tuple[float, ...] = (2.0, 2.0, 2.0, 2.0, 2.0)  # gamma_1..gamma_5
     # Lower bound on the Hessian eigenvalue (Assumption 7.3). None => each
     # machine calibrates from the eigenvalues of its LOCAL Hessian (local

@@ -1,10 +1,16 @@
 """The paper's contribution: DCQ aggregation + DP quasi-Newton protocol."""
 from repro.core.dcq import dcq, dcq_with_sigma, d_k, are_dcq, ARE_MEDIAN
 from repro.core.robust_agg import aggregate
-from repro.core.protocol import DPQNProtocol, ProtocolResult
+from repro.core.protocol import (DPQNProtocol, ProtocolArrays, ProtocolResult,
+                                 monte_carlo_mrse, n_transmissions,
+                                 protocol_rounds, round_budget,
+                                 transmission_names, vmap_machines)
 from repro.core.losses import get_problem, PROBLEMS
 from repro.core import dp, bfgs, byzantine, local, baselines
 
 __all__ = ["dcq", "dcq_with_sigma", "d_k", "are_dcq", "ARE_MEDIAN",
-           "aggregate", "DPQNProtocol", "ProtocolResult", "get_problem",
-           "PROBLEMS", "dp", "bfgs", "byzantine", "local", "baselines"]
+           "aggregate", "DPQNProtocol", "ProtocolArrays", "ProtocolResult",
+           "protocol_rounds", "round_budget", "transmission_names",
+           "n_transmissions", "monte_carlo_mrse", "vmap_machines",
+           "get_problem", "PROBLEMS", "dp", "bfgs", "byzantine", "local",
+           "baselines"]

@@ -16,6 +16,20 @@ Round structure (five p-vector transmissions):
   R4  grad-diff + b4            -> DCQ -> gdiff_cq, g_os      (4.12)
   R5  V^T Hinv_j V g_os + b5    -> DCQ -> H2; theta_qn        (4.15)
 
+In ``center_trust="untrusted"`` mode (§4.3) the node machines additionally
+transmit DP gradient variances ("R2b var"), making SIX DP transmissions;
+the per-transmission budget is eps/6 so basic composition still totals the
+configured (eps, delta).
+
+Compile-once engine: ``protocol_rounds`` is a *pure* function of arrays and
+static config — no ``float()`` on traced values, no Python-side accountant
+mutation — so it jits once per (shape, config) and vmaps over Monte-Carlo
+replicate keys. ``DPQNProtocol`` is the thin stateful shell: ``run`` calls
+the cached compiled core and reconstructs ``PrivacyAccountant``/``noise_sd``
+from the returned spend ledger *outside* the traced region;
+``run_monte_carlo`` batches the core over replicate keys with a single
+jit(vmap(...)) trace.
+
 Indexing note: the paper takes the median over machines [m]_0 but sums the
 CQ correction over node machines [m] only; we aggregate uniformly over all
 m+1 transmitted values (an O(1/m) difference, recorded in DESIGN.md §7).
@@ -23,7 +37,7 @@ m+1 transmitted values (an O(1/m) difference, recorded in DESIGN.md §7).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +57,79 @@ def vmap_machines(fn, *machine_args, bcast=()):
     return jax.vmap(lambda *ma: fn(*ma, *bcast))(*machine_args)
 
 
+def monte_carlo_mrse(thetas: jnp.ndarray, target: jnp.ndarray) -> float:
+    """Mean root-square error over the replicate axis of a
+    ``run_monte_carlo`` output field: thetas (reps, p), target (p,)."""
+    return float(jnp.mean(jnp.linalg.norm(thetas - target, axis=-1)))
+
+
+# ------------------------------------------------------------ budget layout
+
+#: transmission name -> reported-noise key in ``ProtocolResult.noise_sd``
+_SD_KEY = {"R1 theta": "s1", "R2 grad": "s2", "R2b var": "s6",
+           "R3 newton-dir": "s3", "R4 grad-diff": "s4", "R5 bfgs-dir": "s5"}
+
+
+def transmission_names(cfg: ProtocolConfig) -> Tuple[str, ...]:
+    """The DP transmissions Algorithm 1 performs under ``cfg``, in order.
+
+    Trusted center: the five p-vector rounds. Untrusted center (§4.3): the
+    node machines additionally transmit DP gradient variances after R2.
+    """
+    names = ["R1 theta", "R2 grad", "R3 newton-dir", "R4 grad-diff",
+             "R5 bfgs-dir"]
+    if cfg.n_rounds != len(names):
+        raise ValueError(
+            f"Algorithm 1 performs exactly {len(names)} vector rounds; "
+            f"cfg.n_rounds={cfg.n_rounds} would desynchronise the privacy "
+            f"budget split from the actual transmissions")
+    if cfg.center_trust == "untrusted":
+        names.insert(2, "R2b var")
+    return tuple(names)
+
+
+def n_transmissions(cfg: ProtocolConfig) -> int:
+    return len(transmission_names(cfg))
+
+
+def round_budget(cfg: ProtocolConfig) -> Tuple[float, float]:
+    """Per-transmission (eps, delta) so basic composition totals the budget.
+
+    Derived from the ACTUAL number of DP transmissions in the configured
+    mode — 6 in untrusted-center mode, not ``cfg.n_rounds = 5`` — so the
+    accountant never over-spends (regression: tests/test_protocol_engine.py).
+    """
+    k = n_transmissions(cfg)
+    return cfg.eps / k, cfg.delta / k
+
+
+def _failure_probs(cfg: ProtocolConfig, p: int, n: int) -> Tuple[float, ...]:
+    """Per-transmission sensitivity-failure probabilities (Lemmas 4.3/4.4),
+    aligned with ``transmission_names``. Static in shapes and config."""
+    f1 = dp.mean_dp_failure_prob_subexp(p, n, cfg.gammas[0], 1.0, 1.0)
+    f2 = dp.mean_dp_failure_prob_subexp(p, n, cfg.gammas[1], 1.0, 1.0)
+    probs = [f1, f2, 0.0, 0.0, 0.0]
+    if cfg.center_trust == "untrusted":
+        probs.insert(2, 0.0)
+    return tuple(probs)
+
+
+class ProtocolArrays(NamedTuple):
+    """Everything ``protocol_rounds`` produces, as arrays only — a valid jit
+    output and a valid vmap carrier. The stateful shell turns this back into
+    ``ProtocolResult`` (accountant, noise_sd floats) outside the trace."""
+    theta_cq: jnp.ndarray        # initial DCQ estimator (4.4)
+    theta_os: jnp.ndarray        # one-stage estimator (4.8)
+    theta_qn: jnp.ndarray        # final quasi-Newton estimator
+    sigmas: jnp.ndarray          # (n_tx,) reported noise sd per transmission
+    ledger_eps: jnp.ndarray      # (n_tx,) per-transmission eps spend
+    ledger_delta: jnp.ndarray    # (n_tx,) per-transmission delta spend
+    failure_probs: jnp.ndarray   # (n_tx,) sensitivity failure probabilities
+    v_s: jnp.ndarray             # BFGS curvature pair: s = theta_os - theta_cq
+    v_y: jnp.ndarray             # y = gdiff_cq
+    v_rho: jnp.ndarray           # rho = 1 / (s . y)
+
+
 @dataclasses.dataclass
 class ProtocolResult:
     theta_cq: jnp.ndarray          # initial DCQ estimator (4.4)
@@ -51,218 +138,211 @@ class ProtocolResult:
     accountant: dp.PrivacyAccountant
     noise_sd: Dict[str, float]
     v_op: Optional[VOp] = None
+    arrays: Optional[ProtocolArrays] = None
 
 
-class DPQNProtocol:
-    """Paper Algorithm 1. ``run`` consumes pre-sharded data:
-    X: (m+1, n, p), y: (m+1, n); machine 0 is the central processor."""
+# ------------------------------------------------------------ the pure core
 
-    def __init__(self, problem: MEstimationProblem, cfg: ProtocolConfig,
-                 machine_map=None):
-        self.problem = problem
-        self.cfg = cfg
-        # machine_map(fn, *machine_args, bcast=()) runs fn once per machine;
-        # the SPMD protocol passes a shard_map-based implementation.
-        self._mmap = machine_map or vmap_machines
+def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
+                    problem: MEstimationProblem, cfg: ProtocolConfig,
+                    byz_mask: Optional[jnp.ndarray] = None,
+                    attack: str = "scale", attack_factor=-3.0,
+                    theta0: Optional[jnp.ndarray] = None,
+                    theta_cq_override: Optional[jnp.ndarray] = None,
+                    machine_map=vmap_machines) -> ProtocolArrays:
+    """Paper Algorithm 1 as a pure function: arrays in, arrays out.
 
-    # -- noise helpers -----------------------------------------------------
-    def _round_budget(self):
-        c = self.cfg
-        return c.eps / c.n_rounds, c.delta / c.n_rounds
+    jit-compatible with ``problem``/``cfg``/``attack``/``machine_map``
+    static (they are baked into the trace; ``DPQNProtocol`` closes over
+    them), and vmap-compatible over ``key`` for Monte-Carlo replicates.
+    ``X``: (m+1, n, p), ``y``: (m+1, n); machine 0 is the central processor.
+    """
+    prob = problem
+    m_plus_1, n, p = X.shape
+    eps_r, delta_r = round_budget(cfg)
+    sig = []                         # per-transmission reported noise sd
+    if byz_mask is None:
+        byz_mask = jnp.zeros((m_plus_1,), bool)
+    else:
+        # center (machine 0) is honest in trusted mode
+        byz_mask = jnp.concatenate([jnp.zeros((1,), bool), byz_mask])
+    keys = jax.random.split(key, 16)
+    if theta0 is None:
+        theta0 = jnp.zeros((p,), X.dtype)
 
-    def _noise(self, key, x, s):
-        if self.cfg.noiseless:
+    def corrupt(vals, kk):
+        return byz.apply_attack(vals, byz_mask, attack=attack,
+                                factor=attack_factor, key=kk)
+
+    def noise(kk, x, s):
+        if cfg.noiseless:
             return x
-        return dp.add_noise(key, x, jnp.asarray(s, x.dtype))
+        return dp.add_noise(kk, x, jnp.asarray(s, x.dtype))
 
-    # -- the five rounds ----------------------------------------------------
-    def run(self, key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
-            byz_mask: Optional[jnp.ndarray] = None,
-            attack: str = "scale", attack_factor: float = -3.0,
-            theta0: Optional[jnp.ndarray] = None,
-            theta_cq_override: Optional[jnp.ndarray] = None) -> ProtocolResult:
-        cfg = self.cfg
-        prob = self.problem
-        m_plus_1, n, p = X.shape
-        m = m_plus_1 - 1
-        eps_r, delta_r = self._round_budget()
-        acct = dp.PrivacyAccountant()
-        if byz_mask is None:
-            byz_mask = jnp.zeros((m_plus_1,), bool)
-        else:
-            # center (machine 0) is honest in trusted mode
-            byz_mask = jnp.concatenate([jnp.zeros((1,), bool), byz_mask])
-        keys = jax.random.split(key, 16)
-        if theta0 is None:
-            theta0 = jnp.zeros((p,), X.dtype)
+    Xc, yc = X[0], y[0]  # center's own shard
 
-        def corrupt(vals, kk):
-            return byz.apply_attack(vals, byz_mask, attack=attack,
-                                    factor=attack_factor, key=kk)
+    # ---- Round 1: local M-estimators -> theta_cq ----------------------
+    theta_local = machine_map(
+        lambda Xi, yi, t0: local.newton_solve(prob, t0, Xi, yi,
+                                              steps=cfg.newton_steps),
+        X, y, bcast=(theta0,))
+    # lambda_s (Assumption 7.3): fixed constant, or calibrated by EACH
+    # machine from its local Hessian spectrum (local data only => no
+    # extra transmission, no extra privacy cost). The center uses its
+    # own lambda_0 when reconstructing the noise variance.
+    if cfg.lambda_s is None:
+        lam_j = machine_map(lambda Xi, yi, ti: jnp.clip(jnp.linalg.eigvalsh(
+            prob.hessian(ti, Xi, yi))[0], 1e-3, None), X, y, theta_local)
+    else:
+        lam_j = jnp.full((m_plus_1,), cfg.lambda_s, X.dtype)
+    s1_base = dp.s1_theta(p, n, cfg.gammas[0], eps_r, delta_r,
+                          1.0, cfg.tail)
+    s1_j = s1_base / lam_j                         # per-machine sd
+    s1 = jnp.median(s1_j)                          # reported/summary value
+    theta_dp = theta_local if cfg.noiseless else (
+        theta_local + s1_j[:, None]
+        * jax.random.normal(keys[0], theta_local.shape, X.dtype))
+    theta_dp = corrupt(theta_dp, keys[1])
+    sig.append(s1)
 
-        Xc, yc = X[0], y[0]  # center's own shard
+    theta_med = jnp.median(theta_dp, axis=0)
+    if cfg.center_trust == "trusted":
+        sig2 = local.sandwich_diag_variance(prob, theta_med, Xc, yc)
+    else:
+        # untrusted center: median aggregation, no variance needed here
+        sig2 = jnp.ones((p,), X.dtype)
+    s1_eff = 0.0 if cfg.noiseless else s1_j[0]     # center's estimate
+    scale1 = jnp.sqrt((sig2 + n * s1_eff ** 2)) / jnp.sqrt(n)
+    agg1 = "median" if cfg.center_trust == "untrusted" else cfg.aggregator
+    theta_cq = aggregate(theta_dp, method=agg1, scale=scale1, K=cfg.K,
+                         trim_beta=cfg.trim_beta, axis=0)
+    if theta_cq_override is not None:
+        # warm start / ablation hook: continue the protocol from a
+        # caller-supplied initial estimate.
+        theta_cq = theta_cq_override
 
-        # ---- Round 1: local M-estimators -> theta_cq ----------------------
-        theta_local = self._mmap(
-            lambda Xi, yi, t0: local.newton_solve(prob, t0, Xi, yi,
-                                                  steps=cfg.newton_steps),
-            X, y, bcast=(theta0,))
-        # lambda_s (Assumption 7.3): fixed constant, or calibrated by EACH
-        # machine from its local Hessian spectrum (local data only => no
-        # extra transmission, no extra privacy cost). The center uses its
-        # own lambda_0 when reconstructing the noise variance.
-        if cfg.lambda_s is None:
-            lam_j = self._mmap(lambda Xi, yi, ti: jnp.clip(jnp.linalg.eigvalsh(
-                prob.hessian(ti, Xi, yi))[0], 1e-3, None), X, y, theta_local)
-        else:
-            lam_j = jnp.full((m_plus_1,), cfg.lambda_s, X.dtype)
-        s1_base = dp.s1_theta(p, n, cfg.gammas[0], eps_r, delta_r,
-                              1.0, cfg.tail)
-        s1_j = s1_base / lam_j                         # per-machine sd
-        s1 = float(jnp.median(s1_j))                   # reported/summary value
-        theta_dp = theta_local if cfg.noiseless else (
-            theta_local + s1_j[:, None]
-            * jax.random.normal(keys[0], theta_local.shape, X.dtype))
-        theta_dp = corrupt(theta_dp, keys[1])
-        acct.spend("R1 theta", eps_r, delta_r, s1,
-                   dp.mean_dp_failure_prob_subexp(p, n, cfg.gammas[0], 1.0, 1.0))
+    # ---- Round 2: gradients at theta_cq -> g_cq -----------------------
+    grads = machine_map(lambda Xi, yi, t: prob.grad(t, Xi, yi),
+                        X, y, bcast=(theta_cq,))
+    s2 = dp.s2_grad(p, n, cfg.gammas[1], eps_r, delta_r, cfg.tail)
+    grads_dp = noise(keys[2], grads, s2)
+    grads_dp = corrupt(grads_dp, keys[3])
+    sig.append(s2)
 
-        theta_med = jnp.median(theta_dp, axis=0)
-        if cfg.center_trust == "trusted":
-            sig2 = local.sandwich_diag_variance(prob, theta_med, Xc, yc)
-        else:
-            # untrusted center: median aggregation, no variance needed here
-            sig2 = jnp.ones((p,), X.dtype)
-        s1_eff = 0.0 if cfg.noiseless else s1_j[0]     # center's estimate
-        scale1 = jnp.sqrt((sig2 + n * s1_eff ** 2)) / jnp.sqrt(n)
-        agg1 = "median" if cfg.center_trust == "untrusted" else cfg.aggregator
-        theta_cq = aggregate(theta_dp, method=agg1, scale=scale1, K=cfg.K,
-                             trim_beta=cfg.trim_beta, axis=0)
-        if theta_cq_override is not None:
-            # warm start / ablation hook: continue the protocol from a
-            # caller-supplied initial estimate.
-            theta_cq = theta_cq_override
+    s2_eff = 0.0 if cfg.noiseless else s2
+    if cfg.center_trust == "trusted":
+        gvar = local.grad_coordinate_variance(prob, theta_cq, Xc, yc)
+    else:
+        # §4.3: node machines transmit DP variances; center medians them.
+        s6 = dp.s6_variance(p, n, 1.0, eps_r, delta_r)
+        # node machines only (m of m+1 rows): stays a plain vmap — the
+        # slice does not divide a machine mesh evenly.
+        node_gvar = jax.vmap(
+            lambda Xi, yi: prob.grad_variance(theta_cq, Xi, yi))(X[1:], y[1:])
+        node_gvar = noise(keys[4], node_gvar, s6)
+        node_gvar = byz.apply_attack(node_gvar, byz_mask[1:],
+                                     attack=attack, factor=attack_factor,
+                                     key=keys[5])
+        gvar = jnp.median(node_gvar, axis=0)
+        sig.append(s6)
+    scale2 = jnp.sqrt(jnp.maximum(gvar, 1e-12) + n * s2_eff ** 2) / jnp.sqrt(n)
+    g_cq = _agg_for(cfg, "grad", grads_dp, scale2)
 
-        # ---- Round 2: gradients at theta_cq -> g_cq -----------------------
-        grads = self._mmap(lambda Xi, yi, t: prob.grad(t, Xi, yi),
-                           X, y, bcast=(theta_cq,))
-        s2 = dp.s2_grad(p, n, cfg.gammas[1], eps_r, delta_r, cfg.tail)
-        grads_dp = self._noise(keys[2], grads, s2)
-        grads_dp = corrupt(grads_dp, keys[3])
-        acct.spend("R2 grad", eps_r, delta_r, s2,
-                   dp.mean_dp_failure_prob_subexp(p, n, cfg.gammas[1], 1.0, 1.0))
+    # ---- Round 3: Newton directions -> theta_os -----------------------
+    def newton_dir(Xi, yi, t_cq, g):
+        h = prob.hessian(t_cq, Xi, yi) + 1e-9 * jnp.eye(p, dtype=X.dtype)
+        return jnp.linalg.solve(h, g)
+    dirs = machine_map(newton_dir, X, y, bcast=(theta_cq, g_cq))
+    dir_norm = jnp.linalg.norm(dirs, axis=1)          # per machine (Thm 4.5(3))
+    s3 = (0.0 if cfg.noiseless else
+          dp.s3_newton_dir(p, n, cfg.gammas[2], eps_r, delta_r,
+                           1.0, 1.0, cfg.tail))
+    s3_j = (s3 / lam_j) * dir_norm                     # per-machine sd
+    dirs_dp = dirs if cfg.noiseless else (
+        dirs + s3_j[:, None] * jax.random.normal(keys[6], dirs.shape, X.dtype))
+    dirs_dp = corrupt(dirs_dp, keys[7])
+    sig.append(s3)
 
-        s2_eff = 0.0 if cfg.noiseless else s2
-        if cfg.center_trust == "trusted":
-            gvar = local.grad_coordinate_variance(prob, theta_cq, Xc, yc)
-        else:
-            # §4.3: node machines transmit DP variances; center medians them.
-            s6 = dp.s6_variance(p, n, 1.0, eps_r, delta_r)
-            # node machines only (m of m+1 rows): stays a plain vmap — the
-            # slice does not divide a machine mesh evenly.
-            node_gvar = jax.vmap(
-                lambda Xi, yi: prob.grad_variance(theta_cq, Xi, yi))(X[1:], y[1:])
-            node_gvar = self._noise(keys[4], node_gvar, s6)
-            node_gvar = byz.apply_attack(node_gvar, byz_mask[1:],
-                                         attack=attack, factor=attack_factor,
-                                         key=keys[5])
-            gvar = jnp.median(node_gvar, axis=0)
-            acct.spend("R2b var", eps_r, delta_r, s6, 0.0)
-        scale2 = jnp.sqrt(jnp.maximum(gvar, 1e-12) + n * s2_eff ** 2) / jnp.sqrt(n)
-        g_cq = _agg_for(cfg, "grad", grads_dp, scale2)
+    if cfg.center_trust == "trusted":
+        hvar = local.newton_dir_variance(prob, theta_cq, Xc, yc, g_cq)
+    else:
+        hvar = jnp.maximum(jnp.median(
+            (dirs_dp - jnp.median(dirs_dp, 0)) ** 2, 0) * n, 1e-12)
+    s3_0 = (s3 / lam_j[0]) * jnp.linalg.norm(dirs[0])
+    scale3 = jnp.sqrt(jnp.maximum(hvar, 1e-12) + n * s3_0 ** 2) / jnp.sqrt(n)
+    H1 = _agg_for(cfg, "dir", dirs_dp, scale3)
+    theta_os = theta_cq - H1
 
-        # ---- Round 3: Newton directions -> theta_os -----------------------
-        def newton_dir(Xi, yi, t_cq, g):
-            h = prob.hessian(t_cq, Xi, yi) + 1e-9 * jnp.eye(p, dtype=X.dtype)
-            return jnp.linalg.solve(h, g)
-        dirs = self._mmap(newton_dir, X, y, bcast=(theta_cq, g_cq))
-        dir_norm = jnp.linalg.norm(dirs, axis=1)          # per machine (Thm 4.5(3))
-        s3 = (0.0 if cfg.noiseless else
-              dp.s3_newton_dir(p, n, cfg.gammas[2], eps_r, delta_r,
-                               1.0, 1.0, cfg.tail))
-        s3_j = (s3 / lam_j) * dir_norm                     # per-machine sd
-        dirs_dp = dirs if cfg.noiseless else (
-            dirs + s3_j[:, None] * jax.random.normal(keys[6], dirs.shape, X.dtype))
-        dirs_dp = corrupt(dirs_dp, keys[7])
-        acct.spend("R3 newton-dir", eps_r, delta_r, float(s3), 0.0)
+    # ---- Round 4: gradient differences -> gdiff_cq, g_os --------------
+    gdiff = machine_map(lambda Xi, yi, t_os, t_cq: prob.grad(t_os, Xi, yi)
+                        - prob.grad(t_cq, Xi, yi),
+                        X, y, bcast=(theta_os, theta_cq))
+    step = theta_os - theta_cq
+    s4 = (0.0 if cfg.noiseless else
+          dp.s4_grad_diff(p, n, cfg.gammas[3], eps_r, delta_r, 1.0,
+                          cfg.tail))
+    s4_eff = s4 * jnp.linalg.norm(step)
+    gdiff_dp = gdiff if cfg.noiseless else (
+        gdiff + s4_eff * jax.random.normal(keys[8], gdiff.shape, X.dtype))
+    gdiff_dp = corrupt(gdiff_dp, keys[9])
+    sig.append(s4)
 
-        if cfg.center_trust == "trusted":
-            hvar = local.newton_dir_variance(prob, theta_cq, Xc, yc, g_cq)
-        else:
-            hvar = jnp.maximum(jnp.median(
-                (dirs_dp - jnp.median(dirs_dp, 0)) ** 2, 0) * n, 1e-12)
-        s3_0 = (s3 / lam_j[0]) * jnp.linalg.norm(dirs[0])
-        scale3 = jnp.sqrt(jnp.maximum(hvar, 1e-12) + n * s3_0 ** 2) / jnp.sqrt(n)
-        H1 = _agg_for(cfg, "dir", dirs_dp, scale3)
-        theta_os = theta_cq - H1
+    if cfg.center_trust == "trusted":
+        gd = prob.per_sample_grads(theta_os, Xc, yc) \
+            - prob.per_sample_grads(theta_cq, Xc, yc)
+        gdvar = jnp.var(gd, axis=0)
+        gosvar = local.grad_coordinate_variance(prob, theta_os, Xc, yc)
+    else:
+        gdvar = jnp.maximum(jnp.median(
+            (gdiff_dp - jnp.median(gdiff_dp, 0)) ** 2, 0) * n, 1e-12)
+        gosvar = gvar
+    scale4 = jnp.sqrt(jnp.maximum(gdvar, 1e-12)
+                      + n * s4_eff ** 2) / jnp.sqrt(n)
+    gdiff_cq = _agg_for(cfg, "gdiff", gdiff_dp, scale4)
+    scale4b = jnp.sqrt(jnp.maximum(gosvar, 1e-12) + n * s2_eff ** 2
+                       + n * s4_eff ** 2) / jnp.sqrt(n)
+    g_os = _agg_for(cfg, "g_os", grads_dp + gdiff_dp, scale4b)
 
-        # ---- Round 4: gradient differences -> gdiff_cq, g_os --------------
-        gdiff = self._mmap(lambda Xi, yi, t_os, t_cq: prob.grad(t_os, Xi, yi)
-                           - prob.grad(t_cq, Xi, yi),
-                           X, y, bcast=(theta_os, theta_cq))
-        step = theta_os - theta_cq
-        s4 = (0.0 if cfg.noiseless else
-              dp.s4_grad_diff(p, n, cfg.gammas[3], eps_r, delta_r, 1.0,
-                              cfg.tail))
-        s4_eff = s4 * jnp.linalg.norm(step)
-        gdiff_dp = gdiff if cfg.noiseless else (
-            gdiff + s4_eff * jax.random.normal(keys[8], gdiff.shape, X.dtype))
-        gdiff_dp = corrupt(gdiff_dp, keys[9])
-        acct.spend("R4 grad-diff", eps_r, delta_r, float(s4), 0.0)
+    # ---- Round 5: BFGS directions -> theta_qn --------------------------
+    v = make_v(s=step, y=gdiff_cq)
 
-        if cfg.center_trust == "trusted":
-            gd = prob.per_sample_grads(theta_os, Xc, yc) \
-                - prob.per_sample_grads(theta_cq, Xc, yc)
-            gdvar = jnp.var(gd, axis=0)
-            gosvar = local.grad_coordinate_variance(prob, theta_os, Xc, yc)
-        else:
-            gdvar = jnp.maximum(jnp.median(
-                (gdiff_dp - jnp.median(gdiff_dp, 0)) ** 2, 0) * n, 1e-12)
-            gosvar = gvar
-        scale4 = jnp.sqrt(jnp.maximum(gdvar, 1e-12)
-                          + n * s4_eff ** 2) / jnp.sqrt(n)
-        gdiff_cq = _agg_for(cfg, "gdiff", gdiff_dp, scale4)
-        scale4b = jnp.sqrt(jnp.maximum(gosvar, 1e-12) + n * s2_eff ** 2
-                           + n * s4_eff ** 2) / jnp.sqrt(n)
-        g_os = _agg_for(cfg, "g_os", grads_dp + gdiff_dp, scale4b)
+    def bfgs_dir(Xi, yi, t_cq, vs, vy, vrho, g):
+        vop = VOp(s=vs, y=vy, rho=vrho)
+        h = prob.hessian(t_cq, Xi, yi) + 1e-9 * jnp.eye(p, dtype=X.dtype)
+        hinv_vg = jnp.linalg.solve(h, vop(g, transpose=False))
+        return vop(hinv_vg, transpose=True)            # (4.15) machine part
+    h3 = machine_map(bfgs_dir, X, y,
+                     bcast=(theta_cq, v.s, v.y, v.rho, g_os))
+    s5 = (0.0 if cfg.noiseless else
+          dp.s5_bfgs_dir(p, n, cfg.gammas[4], eps_r, delta_r, 1.0, 1.0,
+                         cfg.tail))
+    s5_j = s5 * jnp.linalg.norm(h3, axis=1)
+    h3_dp = h3 if cfg.noiseless else (
+        h3 + s5_j[:, None] * jax.random.normal(keys[10], h3.shape, X.dtype))
+    h3_dp = corrupt(h3_dp, keys[11])
+    sig.append(s5)
 
-        # ---- Round 5: BFGS directions -> theta_qn --------------------------
-        v = make_v(s=step, y=gdiff_cq)
+    if cfg.center_trust == "trusted":
+        h3var = local.bfgs_dir_variance(prob, theta_cq, Xc, yc, v, g_os)
+    else:
+        h3var = jnp.maximum(jnp.median(
+            (h3_dp - jnp.median(h3_dp, 0)) ** 2, 0) * n, 1e-12)
+    s5_0 = s5 * jnp.linalg.norm(h3[0])
+    scale5 = jnp.sqrt(jnp.maximum(h3var, 1e-12) + n * s5_0 ** 2) / jnp.sqrt(n)
+    h3_agg = _agg_for(cfg, "h3", h3_dp, scale5)
+    # center-side rank-1 term: rho (s s^T) g_os  (below eq. 4.15)
+    H2 = h3_agg + v.rho * step * jnp.dot(step, g_os)
+    theta_qn = theta_os - H2
 
-        def bfgs_dir(Xi, yi, t_cq, vs, vy, vrho, g):
-            vop = VOp(s=vs, y=vy, rho=vrho)
-            h = prob.hessian(t_cq, Xi, yi) + 1e-9 * jnp.eye(p, dtype=X.dtype)
-            hinv_vg = jnp.linalg.solve(h, vop(g, transpose=False))
-            return vop(hinv_vg, transpose=True)            # (4.15) machine part
-        h3 = self._mmap(bfgs_dir, X, y,
-                        bcast=(theta_cq, v.s, v.y, v.rho, g_os))
-        s5 = (0.0 if cfg.noiseless else
-              dp.s5_bfgs_dir(p, n, cfg.gammas[4], eps_r, delta_r, 1.0, 1.0,
-                             cfg.tail))
-        s5_j = s5 * jnp.linalg.norm(h3, axis=1)
-        h3_dp = h3 if cfg.noiseless else (
-            h3 + s5_j[:, None] * jax.random.normal(keys[10], h3.shape, X.dtype))
-        h3_dp = corrupt(h3_dp, keys[11])
-        acct.spend("R5 bfgs-dir", eps_r, delta_r, float(s5), 0.0)
-
-        if cfg.center_trust == "trusted":
-            h3var = local.bfgs_dir_variance(prob, theta_cq, Xc, yc, v, g_os)
-        else:
-            h3var = jnp.maximum(jnp.median(
-                (h3_dp - jnp.median(h3_dp, 0)) ** 2, 0) * n, 1e-12)
-        s5_0 = s5 * jnp.linalg.norm(h3[0])
-        scale5 = jnp.sqrt(jnp.maximum(h3var, 1e-12) + n * s5_0 ** 2) / jnp.sqrt(n)
-        h3_agg = _agg_for(cfg, "h3", h3_dp, scale5)
-        # center-side rank-1 term: rho (s s^T) g_os  (below eq. 4.15)
-        H2 = h3_agg + v.rho * step * jnp.dot(step, g_os)
-        theta_qn = theta_os - H2
-
-        return ProtocolResult(
-            theta_cq=theta_cq, theta_os=theta_os, theta_qn=theta_qn,
-            accountant=acct,
-            noise_sd={"s1": float(s1), "s2": float(s2), "s3": float(s3),
-                      "s4": float(s4), "s5": float(s5)},
-            v_op=v)
+    k = n_transmissions(cfg)
+    assert len(sig) == k, "spend ledger out of sync with transmission_names"
+    return ProtocolArrays(
+        theta_cq=theta_cq, theta_os=theta_os, theta_qn=theta_qn,
+        sigmas=jnp.stack([jnp.asarray(s, jnp.float32) for s in sig]),
+        ledger_eps=jnp.full((k,), eps_r, jnp.float32),
+        ledger_delta=jnp.full((k,), delta_r, jnp.float32),
+        failure_probs=jnp.asarray(_failure_probs(cfg, p, n), jnp.float32),
+        v_s=v.s, v_y=v.y, v_rho=v.rho)
 
 
 def _agg_for(cfg: ProtocolConfig, name: str, values, scale):
@@ -272,3 +352,94 @@ def _agg_for(cfg: ProtocolConfig, name: str, values, scale):
         return aggregate(values, method="median", axis=0)
     return aggregate(values, method=cfg.aggregator, scale=scale, K=cfg.K,
                      trim_beta=cfg.trim_beta, axis=0)
+
+
+# ------------------------------------------------------- the stateful shell
+
+class DPQNProtocol:
+    """Paper Algorithm 1. ``run`` consumes pre-sharded data:
+    X: (m+1, n, p), y: (m+1, n); machine 0 is the central processor.
+
+    The protocol core compiles ONCE per (attack, shape) signature and is
+    reused across ``run`` calls; ``run_monte_carlo`` vmaps the same core
+    over replicate keys. ``jit=False`` keeps the eager per-op path (used as
+    the baseline in benchmarks/bench_protocol.py). ``trace_count`` counts
+    how many times the core was (re)traced — tests assert a second call
+    with identical shapes does not retrace.
+    """
+
+    def __init__(self, problem: MEstimationProblem, cfg: ProtocolConfig,
+                 machine_map=None, jit: bool = True):
+        self.problem = problem
+        self.cfg = cfg
+        # machine_map(fn, *machine_args, bcast=()) runs fn once per machine;
+        # the SPMD protocol passes a shard_map-based implementation.
+        self._mmap = machine_map or vmap_machines
+        self._jit = jit
+        self.trace_count = 0
+        self._engines = {}   # attack -> (single, batched)
+
+    def _engine(self, attack: str):
+        """(single, batched-over-keys) callables for one attack mode; built
+        lazily and cached so jit compiles once per protocol instance."""
+        if attack not in self._engines:
+            def rounds(key, X, y, byz_mask, theta0, theta_cq_override,
+                       attack_factor):
+                self.trace_count += 1
+                return protocol_rounds(
+                    key, X, y, self.problem, self.cfg, byz_mask=byz_mask,
+                    attack=attack, attack_factor=attack_factor,
+                    theta0=theta0, theta_cq_override=theta_cq_override,
+                    machine_map=self._mmap)
+            batched = jax.vmap(rounds, in_axes=(0,) + (None,) * 6)
+            if self._jit:
+                rounds, batched = jax.jit(rounds), jax.jit(batched)
+            self._engines[attack] = (rounds, batched)
+        return self._engines[attack]
+
+    def _finalize(self, arrays: ProtocolArrays) -> ProtocolResult:
+        """Rebuild the Python-side accountant from the spend ledger, OUTSIDE
+        any traced region. eps/delta come from the static budget split
+        (exact Python floats); sigmas/failure probs from the ledger arrays."""
+        names = transmission_names(self.cfg)
+        eps_r, delta_r = round_budget(self.cfg)
+        acct = dp.PrivacyAccountant()
+        noise_sd: Dict[str, float] = {}
+        for i, name in enumerate(names):
+            sigma = float(arrays.sigmas[i])
+            acct.spend(name, eps_r, delta_r, sigma,
+                       float(arrays.failure_probs[i]))
+            noise_sd[_SD_KEY[name]] = sigma
+        v = VOp(s=arrays.v_s, y=arrays.v_y, rho=arrays.v_rho)
+        return ProtocolResult(
+            theta_cq=arrays.theta_cq, theta_os=arrays.theta_os,
+            theta_qn=arrays.theta_qn, accountant=acct, noise_sd=noise_sd,
+            v_op=v, arrays=arrays)
+
+    # -- single replicate ---------------------------------------------------
+    def run(self, key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
+            byz_mask: Optional[jnp.ndarray] = None,
+            attack: str = "scale", attack_factor: float = -3.0,
+            theta0: Optional[jnp.ndarray] = None,
+            theta_cq_override: Optional[jnp.ndarray] = None) -> ProtocolResult:
+        single, _ = self._engine(attack)
+        arrays = single(key, X, y, byz_mask, theta0, theta_cq_override,
+                        attack_factor)
+        return self._finalize(arrays)
+
+    # -- batched Monte-Carlo driver ----------------------------------------
+    def run_monte_carlo(self, keys: jax.Array, X: jnp.ndarray,
+                        y: jnp.ndarray,
+                        byz_mask: Optional[jnp.ndarray] = None,
+                        attack: str = "scale", attack_factor: float = -3.0,
+                        theta0: Optional[jnp.ndarray] = None,
+                        theta_cq_override: Optional[jnp.ndarray] = None
+                        ) -> ProtocolArrays:
+        """Run ``len(keys)`` independent replicates of Algorithm 1 in one
+        compiled vmap: jit once, batch over the replicate axis. Returns a
+        ``ProtocolArrays`` whose every field has a leading replicate axis
+        (e.g. ``theta_qn``: (reps, p)). Data/masks are shared across
+        replicates; only the PRNG key varies."""
+        _, batched = self._engine(attack)
+        return batched(keys, X, y, byz_mask, theta0, theta_cq_override,
+                       attack_factor)

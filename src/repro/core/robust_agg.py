@@ -24,11 +24,15 @@ def median_agg(values, axis: int = 0):
 
 
 def trimmed_mean_agg(values, beta: float = 0.2, axis: int = 0):
-    """Coordinate-wise beta-trimmed mean: drop the floor(beta*m) smallest and
-    largest entries per coordinate. Paper: beta >= 2*alpha_n; ARE = 1-beta."""
+    """Coordinate-wise beta-trimmed mean (Yin et al. 2018 convention): drop
+    the floor(beta*m) smallest AND the floor(beta*m) largest entries per
+    coordinate, keeping the central (1-2*beta) fraction. Robust to an
+    alpha-fraction of Byzantine machines whenever beta >= alpha; on clean
+    normal data ARE = 1 - 2*beta relative to the mean (so beta must be
+    < 1/2)."""
     values = jnp.moveaxis(values, axis, 0)
     m = values.shape[0]
-    g = max(int(beta * m / 2), 0)
+    g = max(int(beta * m), 0)
     srt = jnp.sort(values, axis=0)
     if 2 * g >= m:
         raise ValueError(f"trim fraction {beta} too large for m={m}")

@@ -18,6 +18,12 @@ shard_map-based machine map over a 1-D ``("machines",)`` mesh:
 Because the per-machine math and the central math are shared with the
 sequential implementation, the noiseless protocol matches it to fp32
 round-off (<=1e-5 in tests/test_dist.py).
+
+The pure core (core/protocol.py protocol_rounds) is machine-map-agnostic,
+so the whole SPMD protocol jit-compiles once per (mesh, shape) through the
+same compile-once engine as the single-host path — shard_map composes with
+jax.jit — and repeated run_sharded calls on one protocol instance reuse
+the compiled executable.
 """
 from __future__ import annotations
 
@@ -59,7 +65,8 @@ def run_sharded(prob: MEstimationProblem, cfg: ProtocolConfig, mesh: Mesh,
                 key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
                 byz_mask: Optional[jnp.ndarray] = None,
                 attack: str = "scale", attack_factor: float = -3.0,
-                theta0: Optional[jnp.ndarray] = None) -> Dict[str, object]:
+                theta0: Optional[jnp.ndarray] = None,
+                jit: bool = True) -> Dict[str, object]:
     """Run Algorithm 1 with machines sharded over ``mesh``'s first axis.
 
     ``X``: (m+1, n, p), ``y``: (m+1, n) — machine 0 is the central
@@ -75,7 +82,8 @@ def run_sharded(prob: MEstimationProblem, cfg: ProtocolConfig, mesh: Mesh,
     machine_sharding = NamedSharding(mesh, P(axis))
     X = jax.device_put(X, machine_sharding)
     y = jax.device_put(y, machine_sharding)
-    proto = DPQNProtocol(prob, cfg, machine_map=machine_map(mesh, axis))
+    proto = DPQNProtocol(prob, cfg, machine_map=machine_map(mesh, axis),
+                         jit=jit)
     res: ProtocolResult = proto.run(key, X, y, byz_mask=byz_mask,
                                     attack=attack,
                                     attack_factor=attack_factor,

@@ -14,7 +14,7 @@ def test_trimmed_mean_zero_rows_trimmed_equals_mean():
     """A trim fraction that floors to zero rows per side must reduce to
     the plain mean, not drop anything."""
     v = jax.random.normal(jax.random.PRNGKey(0), (8, 5))
-    out = trimmed_mean_agg(v, beta=0.05)          # int(0.05*8/2) == 0
+    out = trimmed_mean_agg(v, beta=0.05)          # int(0.05*8) == 0
     np.testing.assert_allclose(np.asarray(out), np.asarray(v.mean(0)),
                                atol=1e-6)
 

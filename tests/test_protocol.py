@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ProtocolConfig
-from repro.core import DPQNProtocol, get_problem
+from repro.core import DPQNProtocol, get_problem, monte_carlo_mrse
 from repro.core.byzantine import byzantine_mask
 from repro.core.local import newton_solve
 from repro.data.synthetic import make_shards, target_theta
@@ -71,12 +71,12 @@ def test_more_budget_less_error(logistic_shards, problem):
     X, y = logistic_shards
     errs = []
     for eps in (4.0, 50.0):
-        # average over keys to kill noise-draw luck
-        e = np.mean([
-            _err(DPQNProtocol(problem, ProtocolConfig(eps=eps, delta=0.05))
-                 .run(jax.random.PRNGKey(k), X, y).theta_qn)
-            for k in range(3)])
-        errs.append(e)
+        # average over keys to kill noise-draw luck: one compiled
+        # Monte-Carlo batch instead of an eager Python loop
+        proto = DPQNProtocol(problem, ProtocolConfig(eps=eps, delta=0.05))
+        keys = jnp.stack([jax.random.PRNGKey(k) for k in range(3)])
+        arrs = proto.run_monte_carlo(keys, X, y)
+        errs.append(monte_carlo_mrse(arrs.theta_qn, target_theta(P)))
     assert errs[1] < errs[0]
 
 
@@ -99,13 +99,11 @@ def test_byzantine_iterations_help(logistic_shards, problem):
     X, y = logistic_shards
     mask = byzantine_mask(jax.random.PRNGKey(5), M, 0.1)
     cfg = ProtocolConfig(eps=30.0, delta=0.05)
-    errs = {"cq": [], "qn": []}
-    for k in range(3):
-        res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(10 + k), X, y,
-                                             byz_mask=mask)
-        errs["cq"].append(_err(res.theta_cq))
-        errs["qn"].append(_err(res.theta_qn))
-    assert np.mean(errs["qn"]) < np.mean(errs["cq"])
+    keys = jnp.stack([jax.random.PRNGKey(10 + k) for k in range(3)])
+    arrs = DPQNProtocol(problem, cfg).run_monte_carlo(keys, X, y,
+                                                      byz_mask=mask)
+    t = target_theta(P)
+    assert monte_carlo_mrse(arrs.theta_qn, t) < monte_carlo_mrse(arrs.theta_cq, t)
 
 
 def test_median_and_trimmed_aggregators_work(logistic_shards, problem):

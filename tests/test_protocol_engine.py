@@ -1,0 +1,168 @@
+"""The compile-once protocol engine: pure core jit-compatibility, no-retrace
+behaviour, Monte-Carlo/sequential agreement, ledger reconstruction, and the
+untrusted-center privacy-budget regression."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ProtocolConfig
+from repro.core import (DPQNProtocol, get_problem, n_transmissions,
+                        protocol_rounds, round_budget, transmission_names)
+from repro.data.synthetic import make_shards
+
+M, N, P = 12, 300, 5
+
+
+@pytest.fixture(scope="module")
+def shards():
+    return make_shards(jax.random.PRNGKey(0), "logistic", M, N, P)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return get_problem("logistic")
+
+
+def test_protocol_rounds_is_jit_compatible(shards, problem):
+    """The pure core wraps directly in jax.jit with static problem/cfg —
+    no trace-time float() or Python-side accountant mutation."""
+    X, y = shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    f = jax.jit(functools.partial(protocol_rounds, problem=problem, cfg=cfg))
+    arrs = f(jax.random.PRNGKey(0), X, y)
+    assert arrs.theta_qn.shape == (P,)
+    assert arrs.sigmas.shape == (n_transmissions(cfg),)
+    # the spend ledger composes back to the configured budget
+    assert abs(float(arrs.ledger_eps.sum()) - cfg.eps) < 1e-4
+    assert abs(float(arrs.ledger_delta.sum()) - cfg.delta) < 1e-6
+
+
+def test_second_call_does_not_retrace(shards, problem):
+    X, y = shards
+    proto = DPQNProtocol(problem, ProtocolConfig(eps=30.0, delta=0.05))
+    proto.run(jax.random.PRNGKey(0), X, y)
+    assert proto.trace_count == 1
+    proto.run(jax.random.PRNGKey(1), X, y)
+    assert proto.trace_count == 1          # same shapes: cache hit, no retrace
+    keys = jax.random.split(jax.random.PRNGKey(2), 4)
+    proto.run_monte_carlo(keys, X, y)
+    assert proto.trace_count == 2          # the vmapped engine traces once...
+    proto.run_monte_carlo(keys, X, y)
+    assert proto.trace_count == 2          # ...and only once
+
+
+def test_jaxpr_stable_across_calls(shards, problem):
+    """jax.make_jaxpr gives the identical program for two different keys —
+    the trace does not depend on concrete array values."""
+    X, y = shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    f = functools.partial(protocol_rounds, problem=problem, cfg=cfg)
+    j1 = jax.make_jaxpr(f)(jax.random.PRNGKey(0), X, y)
+    j2 = jax.make_jaxpr(f)(jax.random.PRNGKey(1), X, y)
+    assert str(j1) == str(j2)
+
+
+def test_monte_carlo_matches_sequential_noiseless(shards, problem):
+    """vmapped replicates agree with per-replicate run() to 1e-5 when no DP
+    noise enters (the only per-replicate difference is the PRNG key)."""
+    X, y = shards
+    cfg = ProtocolConfig(noiseless=True)
+    proto = DPQNProtocol(problem, cfg)
+    keys = jnp.stack([jax.random.PRNGKey(k) for k in range(3)])
+    arrs = proto.run_monte_carlo(keys, X, y)
+    for r in range(3):
+        res = proto.run(keys[r], X, y)
+        for field in ("theta_cq", "theta_os", "theta_qn"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(arrs, field)[r]),
+                np.asarray(getattr(res, field)), atol=1e-5,
+                err_msg=f"{field} rep {r}")
+
+
+def test_monte_carlo_matches_sequential_private(shards, problem):
+    """With DP noise the key is consumed identically in both paths, so the
+    match is exact-per-key, not just statistical."""
+    X, y = shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    proto = DPQNProtocol(problem, cfg)
+    keys = jnp.stack([jax.random.PRNGKey(k) for k in range(2)])
+    arrs = proto.run_monte_carlo(keys, X, y)
+    for r in range(2):
+        res = proto.run(keys[r], X, y)
+        np.testing.assert_allclose(np.asarray(arrs.theta_qn[r]),
+                                   np.asarray(res.theta_qn), atol=1e-5)
+
+
+def test_accountant_reconstruction_matches_eager(shards, problem):
+    """The shell-reconstructed accountant (jit path) matches the one built
+    from an eager (jit=False) execution of the same pure core."""
+    X, y = shards
+    cfg = ProtocolConfig(eps=20.0, delta=0.05)
+    res_j = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(3), X, y)
+    res_e = DPQNProtocol(problem, cfg, jit=False).run(
+        jax.random.PRNGKey(3), X, y)
+    rj, re_ = res_j.accountant.records, res_e.accountant.records
+    assert [r.name for r in rj] == [r.name for r in re_] \
+        == list(transmission_names(cfg))
+    for a, b in zip(rj, re_):
+        assert a.eps == b.eps and a.delta == b.delta
+        np.testing.assert_allclose(a.sigma, b.sigma, rtol=1e-6)
+        np.testing.assert_allclose(a.failure_prob, b.failure_prob, rtol=1e-6)
+    assert res_j.noise_sd.keys() == res_e.noise_sd.keys()
+    for k in res_j.noise_sd:
+        np.testing.assert_allclose(res_j.noise_sd[k], res_e.noise_sd[k],
+                                   rtol=1e-6)
+
+
+def test_untrusted_center_budget_not_overspent(shards, problem):
+    """Regression: untrusted mode performs SIX DP transmissions (the extra
+    "R2b var" round); the per-round budget must be eps/6, not eps/5, so
+    basic composition never exceeds the configured (eps, delta)."""
+    X, y = shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05, center_trust="untrusted")
+    assert n_transmissions(cfg) == 6
+    eps_r, delta_r = round_budget(cfg)
+    assert abs(eps_r - 5.0) < 1e-12 and abs(delta_r - 0.05 / 6) < 1e-12
+    res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(5), X, y)
+    eb, db = res.accountant.total_basic()
+    assert eb <= cfg.eps + 1e-9
+    assert db <= cfg.delta + 1e-9
+    # and it spends the WHOLE budget, not less
+    assert abs(eb - cfg.eps) < 1e-9
+    assert len(res.accountant.records) == 6
+    assert res.noise_sd["s6"] > 0
+
+
+def test_nonstandard_n_rounds_rejected():
+    """n_rounds is Algorithm 1's fixed round count, not a free knob: a
+    value that desynchronises the budget split from the actual
+    transmissions is rejected loudly instead of silently ignored."""
+    with pytest.raises(ValueError, match="n_rounds"):
+        transmission_names(ProtocolConfig(n_rounds=10))
+
+
+def test_trusted_center_budget_exact(shards, problem):
+    X, y = shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    assert n_transmissions(cfg) == 5
+    res = DPQNProtocol(problem, cfg).run(jax.random.PRNGKey(6), X, y)
+    eb, db = res.accountant.total_basic()
+    assert abs(eb - 30.0) < 1e-9 and abs(db - 0.05) < 1e-9
+
+
+def test_monte_carlo_ledger_batched(shards, problem):
+    """The spend ledger rides through vmap: one row per replicate, all equal
+    in eps/delta, enabling whole-sweep accounting without host sync."""
+    X, y = shards
+    cfg = ProtocolConfig(eps=30.0, delta=0.05)
+    keys = jax.random.split(jax.random.PRNGKey(8), 4)
+    arrs = DPQNProtocol(problem, cfg).run_monte_carlo(keys, X, y)
+    assert arrs.ledger_eps.shape == (4, 5)
+    np.testing.assert_allclose(np.asarray(arrs.ledger_eps.sum(-1)), 30.0,
+                               rtol=1e-6)
+    assert arrs.sigmas.shape == (4, 5)
+    # noise calibration is key-independent: identical across replicates
+    np.testing.assert_allclose(np.asarray(arrs.sigmas.std(0)), 0.0, atol=1e-7)

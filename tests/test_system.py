@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs.base import ProtocolConfig
-from repro.core import DPQNProtocol, get_problem
+from repro.core import DPQNProtocol, get_problem, monte_carlo_mrse
 from repro.data.synthetic import make_shards, target_theta
 
 M, N, P = 40, 1000, 8
@@ -25,13 +25,13 @@ def test_mrse_ordering_cq_os_qn(shards):
     X, y = shards
     cfg = ProtocolConfig(eps=30.0, delta=0.05)
     prob = get_problem("logistic")
-    e_cq = e_os = e_qn = 0.0
-    reps = 5
-    for k in range(reps):
-        r = DPQNProtocol(prob, cfg).run(jax.random.PRNGKey(100 + k), X, y)
-        e_cq += _err(r.theta_cq) / reps
-        e_os += _err(r.theta_os) / reps
-        e_qn += _err(r.theta_qn) / reps
+    # one jit(vmap) Monte-Carlo batch replaces the former eager rep loop
+    keys = jnp.stack([jax.random.PRNGKey(100 + k) for k in range(5)])
+    arrs = DPQNProtocol(prob, cfg).run_monte_carlo(keys, X, y)
+    t = target_theta(P)
+    e_cq = monte_carlo_mrse(arrs.theta_cq, t)
+    e_os = monte_carlo_mrse(arrs.theta_os, t)
+    e_qn = monte_carlo_mrse(arrs.theta_qn, t)
     assert e_os < e_cq
     assert e_qn < e_cq
     # qn should not be (much) worse than os
