@@ -1,0 +1,94 @@
+"""Benchmark regression gate: compare a fresh BENCH_protocol.json against
+the committed baseline and fail on a steady-state slowdown of the compiled
+path.
+
+    python -m benchmarks.check_regression \
+        --fresh BENCH_protocol.json \
+        --baseline benchmarks/baselines/BENCH_protocol_fast.json
+
+A real engine regression (lost jit cache, accidental host sync, eager
+fallback) degrades BOTH signals below; a slower CI machine degrades only
+the first. The gate therefore fails only when both regress by more than
+``--factor`` (default 2x):
+
+  1. wall-clock: fresh compiled_steady_s vs baseline (same-machine noise +
+     cross-machine speed differences land here);
+  2. normalized: speedup_steady = eager / compiled measured on the SAME
+     machine in the same run, so hardware cancels out.
+
+Both signals are only meaningful when the fresh run used the same
+benchmark setting as the baseline; a setting mismatch fails the gate
+outright (regenerate the committed baseline alongside any setting change).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: setting keys that must match for wall-clock times to be comparable
+_SETTING_KEYS = ("problem", "m", "n", "p", "eps", "reps")
+
+
+def compare(fresh: dict, baseline: dict, factor: float = 2.0) -> list:
+    """Return a list of failure messages (empty = gate passes)."""
+    fs, bs = fresh["setting"], baseline["setting"]
+    comparable = all(fs.get(k) == bs.get(k) for k in _SETTING_KEYS)
+
+    wall_ratio = fresh["compiled_steady_s"] / baseline["compiled_steady_s"]
+    speed_ratio = baseline["speedup_steady"] / fresh["speedup_steady"]
+    print(f"settings comparable: {comparable} "
+          f"({ {k: fs.get(k) for k in _SETTING_KEYS} })")
+    print(f"compiled steady-state: fresh {fresh['compiled_steady_s']:.4f}s "
+          f"vs baseline {baseline['compiled_steady_s']:.4f}s "
+          f"({wall_ratio:.2f}x)")
+    print(f"eager->compiled speedup: fresh {fresh['speedup_steady']:.1f}x "
+          f"vs baseline {baseline['speedup_steady']:.1f}x "
+          f"(regression {speed_ratio:.2f}x)")
+
+    failures = []
+    if comparable and wall_ratio > factor and speed_ratio > factor:
+        failures.append(
+            f"compiled path regressed: steady-state wall-clock {wall_ratio:.2f}x "
+            f"slower AND same-machine speedup collapsed {speed_ratio:.2f}x "
+            f"(threshold {factor}x)")
+    if not comparable:
+        # Both signals are setting-dependent (the eager/compiled ratio grows
+        # with problem size), so a cross-setting comparison would misfire —
+        # and silently skipping it would turn the gate into a no-op forever.
+        # Fail loudly: whoever changed the benchmark setting must regenerate
+        # the committed baseline in the same commit.
+        failures.append(
+            "benchmark settings differ from the committed baseline, so the "
+            "ratio gates cannot run; regenerate it via "
+            "`python -m benchmarks.bench_protocol --fast && "
+            "cp BENCH_protocol.json benchmarks/baselines/"
+            "BENCH_protocol_fast.json` (then `git checkout "
+            "BENCH_protocol.json`)")
+    if not fresh.get("ok", False):
+        failures.append("fresh benchmark reported ok=false "
+                        "(compiled steady-state < 3x eager)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="BENCH_protocol.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/BENCH_protocol_fast.json")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max tolerated slowdown (default 2x)")
+    args = ap.parse_args(argv)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = compare(fresh, baseline, factor=args.factor)
+    for msg in failures:
+        print(f"REGRESSION: {msg}", file=sys.stderr)
+    print("PASS" if not failures else "FAIL")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

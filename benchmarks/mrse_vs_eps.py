@@ -2,10 +2,16 @@
 for theta_cq / theta_os / theta_qn, normal and 10%-Byzantine, plus the
 noiseless quasi-Newton reference line.
 
-Replicates run through the compile-once engine: one jit(vmap) Monte-Carlo
-batch per eps point instead of an eager Python loop
-(DPQNProtocol.run_monte_carlo). Running this module as a script also emits
-BENCH_protocol.json (eager-vs-compiled wall-clock) via bench_protocol.
+Thin preset over the scenario-sweep engine (repro.sweep): each curve is a
+``fig_eps_scenarios`` list whose eps axis rides ONE compiled executable
+(the jit group batches eps/byz_frac dynamically), and the clean/Byzantine
+variants share that executable too. Per-key results match the pre-refactor
+``run_monte_carlo`` loops: the sweep feeds the same PRNG key schedule
+(PRNGKey(1000*eps + r)) and host-calibrated noise sds into the identical
+pure core (asserted to 1e-5 in tests/test_sweep.py).
+
+Running this module as a script also emits BENCH_protocol.json
+(eager-vs-compiled wall-clock) via bench_protocol.
 
 Scaled down from the paper's N=2e6 to CPU size (the claims validated are
 ordering and saturation structure, not absolute values — EXPERIMENTS.md).
@@ -14,45 +20,41 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ProtocolConfig
-from repro.core import DPQNProtocol, get_problem, monte_carlo_mrse
-from repro.data.synthetic import make_shards, target_theta
+from repro.sweep import SweepExecutor, fig_eps_reference, fig_eps_scenarios
 
 
 def run_curve(problem_name: str = "logistic", m: int = 50, n: int = 1000,
               p: int = 10, reps: int = 5, byz_frac: float = 0.0,
-              eps_grid=(4, 10, 20, 30, 50), seed: int = 0):
-    X, y = make_shards(jax.random.PRNGKey(seed), problem_name, m, n, p)
-    t = target_theta(p)
-    prob = get_problem(problem_name)
-    nb = int(byz_frac * m)
-    byz = jnp.zeros((m,), bool).at[:nb].set(True) if nb else None
+              eps_grid=(4, 10, 20, 30, 50), seed: int = 0,
+              executor: SweepExecutor | None = None):
+    """One MRSE-vs-eps curve through the sweep engine. Passing a shared
+    ``executor`` lets the clean and Byzantine curves (same jit group) reuse
+    one compiled executable."""
+    scens = fig_eps_scenarios(problem_name, m=m, n=n, p=p, reps=reps,
+                              byz_frac=byz_frac,
+                              eps_grid=tuple(float(e) for e in eps_grid),
+                              seed=seed)
+    ref_scen = fig_eps_reference(problem_name, m=m, n=n, p=p,
+                                 byz_frac=byz_frac, seed=seed)
+    executor = executor or SweepExecutor()
+    art = executor.run(scens + [ref_scen], store_thetas=False)
     rows = []
-    for eps in eps_grid:
-        cfg = ProtocolConfig(eps=float(eps), delta=0.05)
-        proto = DPQNProtocol(prob, cfg)
-        keys = jnp.stack([jax.random.PRNGKey(1000 * eps + r)
-                          for r in range(reps)])
-        arrs = proto.run_monte_carlo(keys, X, y, byz_mask=byz)
-        errs = {name: monte_carlo_mrse(getattr(arrs, f"theta_{name}"), t)
-                for name in ("cq", "os", "qn")}
-        rows.append({"eps": eps, **errs})
-    # noiseless reference
-    res0 = DPQNProtocol(prob, ProtocolConfig(noiseless=True)).run(
-        jax.random.PRNGKey(9), X, y, byz_mask=byz)
-    ref = float(jnp.linalg.norm(res0.theta_qn - t))
+    for eps, s in zip(eps_grid, scens):
+        metrics = art["scenarios"][s.scenario_id()]["metrics"]
+        rows.append({"eps": eps, "cq": metrics["mrse_cq"],
+                     "os": metrics["mrse_os"], "qn": metrics["mrse_qn"]})
+    ref = art["scenarios"][ref_scen.scenario_id()]["metrics"]["mrse_qn"]
     return rows, ref
 
 
 def main(fast: bool = False):
     reps = 3 if fast else 5
     out = {}
+    executor = SweepExecutor()     # shared: clean + byz curves per problem
     for name in ["logistic", "poisson"]:
         for byz in [0.0, 0.1]:
-            rows, ref = run_curve(name, reps=reps, byz_frac=byz)
+            rows, ref = run_curve(name, reps=reps, byz_frac=byz,
+                                  executor=executor)
             tag = f"{name}{'_byz' if byz else ''}"
             out[tag] = {"rows": rows, "noiseless_ref": ref}
             print(f"== {tag}: MRSE vs eps (noiseless qn ref {ref:.4f}) ==")

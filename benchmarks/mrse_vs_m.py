@@ -1,46 +1,42 @@
 """Paper Figures 3/6: MRSE vs the number of machines m (n fixed), normal
 and Byzantine. Expect MRSE decreasing in m with a flattening tail, and the
-sqrt(p/(mn)) optimal-rate scaling (Thm 4.3)."""
+sqrt(p/(mn)) optimal-rate scaling (Thm 4.3).
+
+Thin preset over the scenario-sweep engine: each m is its own jit group
+(shapes differ), but the clean and Byzantine curves share every group via
+the executor's engine cache, and the historical data/key schedule
+(data seed + m, keys PRNGKey(10*m + r)) is preserved by
+``fig_m_scenarios``."""
 from __future__ import annotations
 
 import math
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import ProtocolConfig
-from repro.core import DPQNProtocol, get_problem, monte_carlo_mrse
-from repro.data.synthetic import make_shards, target_theta
+from repro.sweep import SweepExecutor, fig_m_scenarios
 
 
 def run(problem_name: str = "logistic", n: int = 500, p: int = 10,
         m_grid=(10, 20, 40, 80), reps: int = 4, byz_frac: float = 0.0,
-        eps: float = 30.0, seed: int = 0):
-    prob = get_problem(problem_name)
-    t = target_theta(p)
+        eps: float = 30.0, seed: int = 0,
+        executor: SweepExecutor | None = None):
+    scens = fig_m_scenarios(problem_name, n=n, p=p, m_grid=tuple(m_grid),
+                            reps=reps, byz_frac=byz_frac, eps=eps, seed=seed)
+    executor = executor or SweepExecutor()
+    art = executor.run(scens, store_thetas=False)
     rows = []
-    for m in m_grid:
-        X, y = make_shards(jax.random.PRNGKey(seed + m), problem_name,
-                           m, n, p)
-        nb = int(byz_frac * m)
-        byz = jnp.zeros((m,), bool).at[:nb].set(True) if nb else None
-        cfg = ProtocolConfig(eps=eps, delta=0.05)
-        proto = DPQNProtocol(prob, cfg)
-        # one compiled Monte-Carlo batch per m (shapes differ across m, so
-        # each grid point traces once and the reps ride the vmap axis)
-        keys = jnp.stack([jax.random.PRNGKey(10 * m + r)
-                          for r in range(reps)])
-        arrs = proto.run_monte_carlo(keys, X, y, byz_mask=byz)
-        rows.append({"m": m, "mrse": monte_carlo_mrse(arrs.theta_qn, t),
+    for m, s in zip(m_grid, scens):
+        metrics = art["scenarios"][s.scenario_id()]["metrics"]
+        rows.append({"m": m, "mrse": metrics["mrse_qn"],
                      "rate": math.sqrt(p / (m * n))})
     return rows
 
 
 def main(fast: bool = False):
     out = {}
+    executor = SweepExecutor()     # clean + byz curves share per-m groups
     for byz in [0.0, 0.1]:
         rows = run(reps=2 if fast else 4, byz_frac=byz,
-                   m_grid=(10, 20, 40) if fast else (10, 20, 40, 80))
+                   m_grid=(10, 20, 40) if fast else (10, 20, 40, 80),
+                   executor=executor)
         tag = f"m_sweep{'_byz' if byz else ''}"
         out[tag] = rows
         print(f"== MRSE vs m ({'10% byz' if byz else 'normal'}) ==")

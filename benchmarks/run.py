@@ -11,6 +11,22 @@ import time
 import traceback
 
 
+def _sweep_smoke(fast: bool = False):
+    """The CI smoke grid through the sweep engine (one compile per jit
+    group, asserted via the executor's trace counters)."""
+    from repro.sweep import SweepExecutor, fast_variant, smoke_scenarios
+    scens = smoke_scenarios()
+    if fast:
+        scens = fast_variant(scens)
+    executor = SweepExecutor(progress=print)
+    art = executor.run(scens, store_thetas=False)
+    retraced = {k: c for k, c in executor.trace_counts.items() if c > 1}
+    if retraced:
+        raise RuntimeError(f"{len(retraced)} jit group(s) retraced")
+    return {"n_scenarios": len(art["scenarios"]),
+            "n_groups": len(executor.trace_counts)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -24,6 +40,7 @@ def main(argv=None):
     suites = [
         ("are_dcq (paper §1.2: ARE 0.955 vs 0.637)", are_dcq.main),
         ("bench_protocol (eager vs compiled engine)", bench_protocol.main),
+        ("sweep_smoke (scenario-sweep engine grid)", _sweep_smoke),
         ("mrse_vs_eps (Figures 1/2/4/5)", mrse_vs_eps.main),
         ("mrse_vs_m (Figures 3/6)", mrse_vs_m.main),
         ("table1_digits (Table 1 stand-in)", table1_digits.main),

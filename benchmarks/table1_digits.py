@@ -5,69 +5,52 @@ MNIST is not downloadable in this container, so a deterministic
 (feature screening -> logistic probes; DESIGN.md §2). Validated claims are
 structural: accuracy saturates for eps >= 20, Byzantine machines barely
 move it, and the pair needing more features needs more budget.
-"""
+
+Thin preset over the scenario-sweep engine: each pair's eps grid AND its
+Byzantine point ride one jit group (``table1_scenarios``); pairs with the
+same feature count share the compiled executable through the shared
+executor. The global (non-distributed, non-private) reference is computed
+directly from the scenario's data builder."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ProtocolConfig
-from repro.core import DPQNProtocol, get_problem
-from repro.data.synthetic import digits_like_dataset
+from repro.core import get_problem
+from repro.core.local import newton_solve
+from repro.sweep import SweepExecutor, table1_scenarios
+from repro.sweep.data import build_data
 
 
-def screen_features(X, y, k: int) -> jnp.ndarray:
-    """Lasso-style screening stand-in: top-k |two-sample t| features."""
-    mu1 = X[y == 1].mean(0)
-    mu0 = X[y == 0].mean(0)
-    s = X.std(0) + 1e-9
-    t = jnp.abs(mu1 - mu0) / s
-    return jnp.argsort(-t)[:k]
-
-
-def run_pair(pair, n_features_used: int, m: int = 10, eps: float = 20.0,
-             byz: bool = False, seed: int = 0, n_per_machine: int = 1000):
-    n_total = (m + 1) * n_per_machine + 4000
-    X, y, _ = digits_like_dataset(seed, n_total, pair=pair)
-    cols = screen_features(X[:4000], y[:4000], n_features_used)
-    Xs = X[:, cols]
-    Xtr = Xs[:(m + 1) * n_per_machine].reshape(m + 1, n_per_machine, -1)
-    ytr = y[:(m + 1) * n_per_machine].reshape(m + 1, n_per_machine)
-    Xte, yte = Xs[-4000:], y[-4000:]
-
-    cfg = ProtocolConfig(eps=eps, delta=0.05,
-                         gammas=(0.5,) * 5)      # paper uses gamma=0.5 here
-    nb = max(1, m // 10) if byz else 0
-    mask = jnp.zeros((m,), bool).at[:nb].set(True) if nb else None
-    proto = DPQNProtocol(get_problem("logistic"), cfg)
-    # average out DP-noise draws: one compiled 3-replicate batch
-    keys = jnp.stack([jax.random.PRNGKey(seed + 1 + 1000 * rep)
-                      for rep in range(3)])
-    arrs = proto.run_monte_carlo(keys, Xtr, ytr, byz_mask=mask,
-                                 attack="scale", attack_factor=3.0)  # paper: +3x
-    preds = (jax.nn.sigmoid(arrs.theta_qn @ Xte.T) > 0.5).astype(jnp.float32)
-    acc = float((preds == yte[None, :]).mean())
-    # global (non-distributed, non-private) reference
-    from repro.core.local import newton_solve
-    theta_g = newton_solve(get_problem("logistic"),
-                           jnp.zeros((Xs.shape[1],)),
-                           Xtr.reshape(-1, Xs.shape[1]), ytr.reshape(-1))
-    acc_g = float(((jax.nn.sigmoid(Xte @ theta_g) > 0.5).astype(jnp.float32)
-                   == yte).mean())
-    return acc, acc_g
+def global_reference_acc(scenario) -> float:
+    """Pooled (non-distributed, non-private) logistic fit on the scenario's
+    training shards, evaluated on its held-out split."""
+    Xtr, ytr, aux = build_data(scenario)
+    k = Xtr.shape[-1]
+    theta_g = newton_solve(get_problem("logistic"), jnp.zeros((k,)),
+                           Xtr.reshape(-1, k), ytr.reshape(-1))
+    preds = (jax.nn.sigmoid(aux["Xte"] @ theta_g) > 0.5).astype(jnp.float32)
+    return float((preds == aux["yte"]).mean())
 
 
 def main(fast: bool = False):
     pairs = {(8, 9): 8, (6, 8): 5, (6, 9): 5}
-    eps_grid = [5, 30] if fast else [5, 10, 20, 30]
+    eps_grid = [5.0, 30.0] if fast else [5.0, 10.0, 20.0, 30.0]
     out = {}
+    executor = SweepExecutor()     # (6,8)/(6,9) share the p=5 jit group
     print("== Table 1 stand-in: accuracy vs eps (digits-like pairs) ==")
     print(f"{'pair':>8} {'#feat':>5} | " +
-          " ".join(f"eps={e:<4d}" for e in eps_grid) +
+          " ".join(f"eps={e:<4g}" for e in eps_grid) +
           " | byz(30) | global")
     for pair, k in pairs.items():
-        accs = [run_pair(pair, k, eps=e)[0] for e in eps_grid]
-        acc_byz, acc_g = run_pair(pair, k, eps=30.0, byz=True)
+        scens = table1_scenarios(pair, k, eps_grid=tuple(eps_grid),
+                                 byz_eps=(30.0,))
+        art = executor.run(scens, store_thetas=False)
+        accs = [art["scenarios"][s.scenario_id()]["metrics"]["accuracy"]
+                for s in scens[:len(eps_grid)]]
+        acc_byz = art["scenarios"][scens[-1].scenario_id()
+                                   ]["metrics"]["accuracy"]
+        acc_g = global_reference_acc(scens[0])
         out[str(pair)] = {"accs": accs, "byz": acc_byz, "global": acc_g}
         print(f"{str(pair):>8} {k:5d} | " +
               " ".join(f"{a:7.3f}" for a in accs) +

@@ -2,6 +2,11 @@
 estimators, normal and Byzantine, plus Newton/GD baselines and the
 untrusted-center variant (§4.3).
 
+The protocol curves run through the scenario-sweep engine: all eps points
+x {clean, 10% Byzantine} form ONE jit group (eps and the Byzantine mask
+ride the scenario vmap axis), so the whole table below costs a single
+compilation. Baselines and the §4.3 variant stay on the direct API.
+
     PYTHONPATH=src python examples/dpqn_logistic.py [--reps 5]
 """
 import argparse
@@ -11,9 +16,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ProtocolConfig
 from repro.core import DPQNProtocol, get_problem
-from repro.core import monte_carlo_mrse as mc_mrse
 from repro.core.baselines import gd_estimator, newton_estimator
 from repro.data.synthetic import make_shards, target_theta
+from repro.sweep import Scenario, SweepExecutor
 
 
 def mrse(estimates, target):
@@ -33,31 +38,36 @@ def main(argv=None):
     X, y = make_shards(jax.random.PRNGKey(0), "logistic", m, n, p)
     t = target_theta(p)
     prob = get_problem("logistic")
-    byz = jnp.zeros((m,), bool).at[:m // 10].set(True)
+
+    eps_grid = [4, 10, 20, 30, 50]
+    # one scenario per (eps, byzantine?) — all ten share one jit group
+    def scen(eps, byz):
+        return Scenario(problem="logistic", m=m, n=n, p=p, eps=float(eps),
+                        delta=0.05, byz_frac=0.1 if byz else 0.0,
+                        reps=args.reps, data_seed=0,
+                        rep_seeds=tuple((200 if byz else 100) + r
+                                        for r in range(args.reps)))
+    scens = {(eps, byz): scen(eps, byz)
+             for eps in eps_grid for byz in (False, True)}
+    art = SweepExecutor().run(scens.values(), store_thetas=False)
 
     print(f"logistic regression, m={m} machines x n={n}, p={p}, "
           f"{args.reps} reps")
     print(f"{'eps':>5} | {'cq':>7} {'os':>7} {'qn':>7} | "
           f"{'qn byz':>7} | {'newton':>7} {'gd':>7}")
-    for eps in [4, 10, 20, 30, 50]:
+    for eps in eps_grid:
         cfg = ProtocolConfig(eps=float(eps), delta=0.05)
-        proto = DPQNProtocol(prob, cfg)
-        # replicates batch through the compile-once Monte-Carlo engine
-        keys = jnp.stack([jax.random.PRNGKey(100 + r)
-                          for r in range(args.reps)])
-        keys_b = jnp.stack([jax.random.PRNGKey(200 + r)
-                            for r in range(args.reps)])
-        arrs = proto.run_monte_carlo(keys, X, y)
-        arrs_b = proto.run_monte_carlo(keys_b, X, y, byz_mask=byz)
+        met = art["scenarios"][scens[(eps, False)].scenario_id()]["metrics"]
+        met_b = art["scenarios"][scens[(eps, True)].scenario_id()]["metrics"]
         newt = [newton_estimator(prob, cfg, jax.random.PRNGKey(300 + r),
                                  X, y).theta for r in range(args.reps)]
         gd = [gd_estimator(prob, cfg, jax.random.PRNGKey(400 + r), X, y,
                            rounds=20, lr=2.0).theta
               for r in range(args.reps)]
-        print(f"{eps:5d} | {mc_mrse(arrs.theta_cq, t):7.4f} "
-              f"{mc_mrse(arrs.theta_os, t):7.4f} "
-              f"{mc_mrse(arrs.theta_qn, t):7.4f} | "
-              f"{mc_mrse(arrs_b.theta_qn, t):7.4f} | "
+        print(f"{eps:5d} | {met['mrse_cq']:7.4f} "
+              f"{met['mrse_os']:7.4f} "
+              f"{met['mrse_qn']:7.4f} | "
+              f"{met_b['mrse_qn']:7.4f} | "
               f"{mrse(newt, t):7.4f} {mrse(gd, t):7.4f}")
 
     # noiseless reference + untrusted center

@@ -30,9 +30,16 @@ def gaussian_sigma(sensitivity: float, eps: float, delta: float) -> float:
     return math.sqrt(2.0 * math.log(1.25 / delta)) * sensitivity / eps
 
 
-def noise_multiplier(eps: float, delta: float) -> float:
-    """The paper's Delta := sqrt(2 log(1/delta)) / eps (Thms 4.4/4.5)."""
-    return math.sqrt(2.0 * math.log(1.0 / delta)) / eps
+def noise_multiplier(eps, delta):
+    """The paper's Delta := sqrt(2 log(1/delta)) / eps (Thms 4.4/4.5).
+
+    Dual-mode: exact ``math`` arithmetic for Python floats (the static
+    compile-once path), ``jnp`` arithmetic when eps/delta are traced arrays
+    (the sweep executor batches privacy budgets along a vmap axis).
+    """
+    if isinstance(eps, (int, float)) and isinstance(delta, (int, float)):
+        return math.sqrt(2.0 * math.log(1.0 / delta)) / eps
+    return jnp.sqrt(2.0 * jnp.log(1.0 / delta)) / eps
 
 
 def add_noise(key: jax.Array, x: jnp.ndarray, s: float) -> jnp.ndarray:
@@ -124,11 +131,15 @@ def s5_bfgs_dir(p: int, n: int, gamma: float, eps: float, delta: float,
             * vh_norm * dir_norm * d / n)
 
 
-def s6_variance(p: int, n: int, gamma: float, eps: float,
-                delta: float) -> float:
-    """§4.3: s6 = sqrt(2) gamma p (4 log n + 1) sqrt(log(1.25 p/delta)) / (n eps)."""
-    return (math.sqrt(2.0) * gamma * p * (4.0 * math.log(n) + 1.0)
-            * math.sqrt(math.log(1.25 * p / delta)) / (n * eps))
+def s6_variance(p: int, n: int, gamma: float, eps, delta):
+    """§4.3: s6 = sqrt(2) gamma p (4 log n + 1) sqrt(log(1.25 p/delta)) / (n eps).
+
+    Dual-mode in (eps, delta) like ``noise_multiplier``.
+    """
+    c = math.sqrt(2.0) * gamma * p * (4.0 * math.log(n) + 1.0) / n
+    if isinstance(eps, (int, float)) and isinstance(delta, (int, float)):
+        return c * math.sqrt(math.log(1.25 * p / delta)) / eps
+    return c * jnp.sqrt(jnp.log(1.25 * p / delta)) / eps
 
 
 # ---------------------------------------------------------------- composition

@@ -103,6 +103,39 @@ def round_budget(cfg: ProtocolConfig) -> Tuple[float, float]:
     return cfg.eps / k, cfg.delta / k
 
 
+def calibrate_sigma_base(cfg: ProtocolConfig, p: int, n: int,
+                         eps=None, delta=None) -> Tuple:
+    """Per-transmission BASE noise sds (norm factors = 1), aligned with
+    ``transmission_names``. The budget dependence of Algorithm 1's noise
+    calibration lives entirely in these scalars, so the sweep executor can
+    compute them host-side in float64 per scenario and batch them along a
+    vmap axis (``protocol_rounds(sigma_base=...)``) — scenarios that differ
+    only in (eps, delta) then share one compiled executable AND match the
+    compile-once static path bit-for-bit.
+
+    ``eps``/``delta`` override the totals in ``cfg``; Python floats keep
+    exact ``math`` arithmetic, traced scalars route through the dual-mode
+    dp.py calibration.
+    """
+    eps_t = cfg.eps if eps is None else eps
+    delta_t = cfg.delta if delta is None else delta
+    k = n_transmissions(cfg)
+    eps_r, delta_r = eps_t / k, delta_t / k
+    nl = cfg.noiseless
+    s1 = dp.s1_theta(p, n, cfg.gammas[0], eps_r, delta_r, 1.0, cfg.tail)
+    s2 = dp.s2_grad(p, n, cfg.gammas[1], eps_r, delta_r, cfg.tail)
+    s3 = 0.0 if nl else dp.s3_newton_dir(p, n, cfg.gammas[2], eps_r, delta_r,
+                                         1.0, 1.0, cfg.tail)
+    s4 = 0.0 if nl else dp.s4_grad_diff(p, n, cfg.gammas[3], eps_r, delta_r,
+                                        1.0, cfg.tail)
+    s5 = 0.0 if nl else dp.s5_bfgs_dir(p, n, cfg.gammas[4], eps_r, delta_r,
+                                       1.0, 1.0, cfg.tail)
+    out = [s1, s2, s3, s4, s5]
+    if cfg.center_trust == "untrusted":
+        out.insert(2, dp.s6_variance(p, n, 1.0, eps_r, delta_r))
+    return tuple(out)
+
+
 def _failure_probs(cfg: ProtocolConfig, p: int, n: int) -> Tuple[float, ...]:
     """Per-transmission sensitivity-failure probabilities (Lemmas 4.3/4.4),
     aligned with ``transmission_names``. Static in shapes and config."""
@@ -149,17 +182,35 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
                     attack: str = "scale", attack_factor=-3.0,
                     theta0: Optional[jnp.ndarray] = None,
                     theta_cq_override: Optional[jnp.ndarray] = None,
-                    machine_map=vmap_machines) -> ProtocolArrays:
+                    machine_map=vmap_machines,
+                    eps=None, delta=None,
+                    sigma_base=None) -> ProtocolArrays:
     """Paper Algorithm 1 as a pure function: arrays in, arrays out.
 
     jit-compatible with ``problem``/``cfg``/``attack``/``machine_map``
     static (they are baked into the trace; ``DPQNProtocol`` closes over
     them), and vmap-compatible over ``key`` for Monte-Carlo replicates.
     ``X``: (m+1, n, p), ``y``: (m+1, n); machine 0 is the central processor.
+
+    ``eps``/``delta`` optionally override the TOTAL privacy budget in
+    ``cfg`` and may be traced scalars; ``sigma_base`` optionally supplies
+    the (n_tx,) per-transmission base noise sds from
+    ``calibrate_sigma_base`` — the sweep executor computes them host-side
+    in float64 per scenario and vmaps over them, so scenarios differing
+    only in privacy budget share one compiled executable and reproduce the
+    static path bit-for-bit.
     """
     prob = problem
     m_plus_1, n, p = X.shape
-    eps_r, delta_r = round_budget(cfg)
+    if eps is None and delta is None:
+        eps_r, delta_r = round_budget(cfg)      # exact Python floats
+    else:
+        k_tx = n_transmissions(cfg)
+        eps_r = (cfg.eps if eps is None else eps) / k_tx
+        delta_r = (cfg.delta if delta is None else delta) / k_tx
+    if sigma_base is None:
+        sigma_base = calibrate_sigma_base(cfg, p, n, eps=eps, delta=delta)
+    sb = dict(zip(transmission_names(cfg), sigma_base))
     sig = []                         # per-transmission reported noise sd
     if byz_mask is None:
         byz_mask = jnp.zeros((m_plus_1,), bool)
@@ -195,8 +246,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
             prob.hessian(ti, Xi, yi))[0], 1e-3, None), X, y, theta_local)
     else:
         lam_j = jnp.full((m_plus_1,), cfg.lambda_s, X.dtype)
-    s1_base = dp.s1_theta(p, n, cfg.gammas[0], eps_r, delta_r,
-                          1.0, cfg.tail)
+    s1_base = sb["R1 theta"]
     s1_j = s1_base / lam_j                         # per-machine sd
     s1 = jnp.median(s1_j)                          # reported/summary value
     theta_dp = theta_local if cfg.noiseless else (
@@ -224,7 +274,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     # ---- Round 2: gradients at theta_cq -> g_cq -----------------------
     grads = machine_map(lambda Xi, yi, t: prob.grad(t, Xi, yi),
                         X, y, bcast=(theta_cq,))
-    s2 = dp.s2_grad(p, n, cfg.gammas[1], eps_r, delta_r, cfg.tail)
+    s2 = sb["R2 grad"]
     grads_dp = noise(keys[2], grads, s2)
     grads_dp = corrupt(grads_dp, keys[3])
     sig.append(s2)
@@ -234,7 +284,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
         gvar = local.grad_coordinate_variance(prob, theta_cq, Xc, yc)
     else:
         # §4.3: node machines transmit DP variances; center medians them.
-        s6 = dp.s6_variance(p, n, 1.0, eps_r, delta_r)
+        s6 = sb["R2b var"]
         # node machines only (m of m+1 rows): stays a plain vmap — the
         # slice does not divide a machine mesh evenly.
         node_gvar = jax.vmap(
@@ -254,9 +304,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
         return jnp.linalg.solve(h, g)
     dirs = machine_map(newton_dir, X, y, bcast=(theta_cq, g_cq))
     dir_norm = jnp.linalg.norm(dirs, axis=1)          # per machine (Thm 4.5(3))
-    s3 = (0.0 if cfg.noiseless else
-          dp.s3_newton_dir(p, n, cfg.gammas[2], eps_r, delta_r,
-                           1.0, 1.0, cfg.tail))
+    s3 = sb["R3 newton-dir"]
     s3_j = (s3 / lam_j) * dir_norm                     # per-machine sd
     dirs_dp = dirs if cfg.noiseless else (
         dirs + s3_j[:, None] * jax.random.normal(keys[6], dirs.shape, X.dtype))
@@ -278,9 +326,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
                         - prob.grad(t_cq, Xi, yi),
                         X, y, bcast=(theta_os, theta_cq))
     step = theta_os - theta_cq
-    s4 = (0.0 if cfg.noiseless else
-          dp.s4_grad_diff(p, n, cfg.gammas[3], eps_r, delta_r, 1.0,
-                          cfg.tail))
+    s4 = sb["R4 grad-diff"]
     s4_eff = s4 * jnp.linalg.norm(step)
     gdiff_dp = gdiff if cfg.noiseless else (
         gdiff + s4_eff * jax.random.normal(keys[8], gdiff.shape, X.dtype))
@@ -313,9 +359,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
         return vop(hinv_vg, transpose=True)            # (4.15) machine part
     h3 = machine_map(bfgs_dir, X, y,
                      bcast=(theta_cq, v.s, v.y, v.rho, g_os))
-    s5 = (0.0 if cfg.noiseless else
-          dp.s5_bfgs_dir(p, n, cfg.gammas[4], eps_r, delta_r, 1.0, 1.0,
-                         cfg.tail))
+    s5 = sb["R5 bfgs-dir"]
     s5_j = s5 * jnp.linalg.norm(h3, axis=1)
     h3_dp = h3 if cfg.noiseless else (
         h3 + s5_j[:, None] * jax.random.normal(keys[10], h3.shape, X.dtype))

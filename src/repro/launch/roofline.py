@@ -24,7 +24,6 @@ import re
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch import mesh as meshmod
@@ -83,8 +82,8 @@ def count_params(cfg: ModelConfig) -> Dict[str, int]:
     from repro.models.model import Model
     model = Model(cfg)
     shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
-    total = sum(math.prod(l.shape)
-                for l in jax.tree_util.tree_leaves(shapes))
+    total = sum(math.prod(leaf.shape)
+                for leaf in jax.tree_util.tree_leaves(shapes))
     active = total
     if cfg.moe is not None:
         per_expert = 3 * cfg.d_model * cfg.moe.d_ff_expert

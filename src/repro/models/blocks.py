@@ -6,7 +6,7 @@ dry-run). xLSTM's heterogeneous 12-layer stack is a Python loop.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,6 @@ Shapes: q (B, S, Hq, Dh); k, v (B, T, Hkv, Dh). Output (B, S, Hq, Dh).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -76,7 +74,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         q_i, qpos_i = qi          # (B, qc, Hkv, g, Dh), (qc,)
 
         def kv_step(carry, ki):
-            acc, m, l = carry
+            acc, m, lse = carry
             k_j, v_j, kpos_j, valid_j = ki
             # scores: (B, qc, Hkv, g, kc)
             s = jnp.einsum("bqhgd,bkhd->bqhgk", q_i, k_j,
@@ -90,19 +88,19 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p.sum(axis=-1)
+            lse_new = lse * corr + p.sum(axis=-1)
             pv = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v_j.dtype), v_j,
                             preferred_element_type=jnp.float32)
             acc_new = acc * corr[..., None] + pv
-            return (acc_new, m_new, l_new), None
+            return (acc_new, m_new, lse_new), None
 
         acc0 = jnp.zeros((B, q_chunk, Hkv, groups, Dh), jnp.float32)
         m0 = jnp.full((B, q_chunk, Hkv, groups), NEG_INF, jnp.float32)
-        l0 = jnp.zeros((B, q_chunk, Hkv, groups), jnp.float32)
-        (acc, m, l), _ = jax.lax.scan(
-            kv_step, (acc0, m0, l0),
+        lse0 = jnp.zeros((B, q_chunk, Hkv, groups), jnp.float32)
+        (acc, m, lse), _ = jax.lax.scan(
+            kv_step, (acc0, m0, lse0),
             (kc, vc, _chunk(k_pos, kv_chunk, 0), _chunk(kv_valid, kv_chunk, 0)))
-        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = acc / jnp.maximum(lse[..., None], 1e-30)
         return None, out.astype(q.dtype)
 
     _, out = jax.lax.scan(q_step, None,

@@ -47,7 +47,6 @@ def ssm_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
 
 
 def _split_proj(p: Params, x: jnp.ndarray, cfg: ModelConfig):
-    s = cfg.ssm
     d_inner, H, conv_dim = _dims(cfg)
     proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
     z = proj[..., :d_inner]

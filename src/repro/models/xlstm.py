@@ -36,7 +36,6 @@ def mlstm_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
     d = cfg.d_model
     H = cfg.n_heads
     d_inner = 2 * d
-    dh = d_inner // H
     ks = jax.random.split(key, 7)
     return {
         "w_up": _init(ks[0], (d, d_inner), dtype=dtype),      # main branch
@@ -84,7 +83,8 @@ def mlstm_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     Q = min(modes.chunk_override(chunk, S), S)
     pad = (-S) % Q
     if pad:
-        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        def padf(t):
+            return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
         q, k, v = padf(q), padf(k), padf(v)
         a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
         b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)), constant_values=NEG_INF)

@@ -1,0 +1,27 @@
+"""Scenario-sweep engine over the paper's experiment grid (§5).
+
+Declarative grids (``ScenarioGrid``) expand into ``Scenario`` points,
+which the executor buckets by jit group key and pushes through one
+compiled ``jit(vmap(vmap(protocol_rounds)))`` per group — the whole paper
+grid compiles a handful of times instead of once per point. Results land
+in a versioned, resumable JSON artifact (``repro.sweep.artifact``).
+
+CLI: ``python -m repro.sweep --preset smoke`` (see repro/sweep/cli.py).
+"""
+from repro.sweep.artifact import (SCHEMA_VERSION, load, rows, save, to_csv,
+                                  validate)
+from repro.sweep.executor import SweepExecutor, run_scenarios
+from repro.sweep.grid import (Scenario, ScenarioGrid, group_label,
+                              group_scenarios, scenario_from_json)
+from repro.sweep.presets import (PRESETS, build_preset, fast_variant,
+                                 fig_eps_reference, fig_eps_scenarios,
+                                 fig_m_scenarios, smoke_scenarios,
+                                 table1_scenarios)
+
+__all__ = ["SCHEMA_VERSION", "load", "rows", "save", "to_csv", "validate",
+           "SweepExecutor", "run_scenarios",
+           "Scenario", "ScenarioGrid", "group_label", "group_scenarios",
+           "scenario_from_json",
+           "PRESETS", "build_preset", "fast_variant", "fig_eps_reference",
+           "fig_eps_scenarios", "fig_m_scenarios", "smoke_scenarios",
+           "table1_scenarios"]

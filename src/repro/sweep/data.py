@@ -1,0 +1,89 @@
+"""Scenario -> arrays: data builders, Byzantine masks, replicate keys, and
+per-scenario metrics. Kept separate from the executor so presets and tests
+can reproduce exactly what a scenario feeds the compiled protocol core.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import monte_carlo_mrse
+from repro.data.synthetic import (digits_like_dataset, make_shards,
+                                  target_theta)
+from repro.sweep.grid import Scenario
+
+#: held-out rows for the digits pipeline (screening + test, table1 layout)
+_DIGITS_SCREEN = 4000
+_DIGITS_TEST = 4000
+
+
+def byz_mask(scenario: Scenario) -> jnp.ndarray:
+    """(m,) bool mask over NODE machines: the first floor(byz_frac * m)
+    are Byzantine (the deterministic layout every benchmark preset uses;
+    machine order is exchangeable for i.i.d. shards)."""
+    mask = jnp.zeros((scenario.m,), bool)
+    nb = scenario.n_byzantine()
+    return mask.at[:nb].set(True) if nb else mask
+
+
+def replicate_keys(scenario: Scenario) -> jnp.ndarray:
+    """(reps, 2) PRNG keys. Explicit ``rep_seeds`` reproduce a benchmark's
+    historical key schedule; otherwise keys derive deterministically from
+    the scenario id so resumed sweeps repeat the same draws."""
+    if scenario.rep_seeds is not None:
+        return jnp.stack([jax.random.PRNGKey(s) for s in scenario.rep_seeds])
+    sid_hash = int.from_bytes(
+        hashlib.sha1(scenario.scenario_id().encode()).digest()[:4], "big")
+    base = jax.random.PRNGKey(sid_hash)
+    return jax.random.split(base, scenario.reps)
+
+
+def screen_features(X, y, k: int) -> jnp.ndarray:
+    """Lasso-style screening stand-in: top-k |two-sample t| features
+    (shared with the Table 1 benchmark)."""
+    mu1 = X[y == 1].mean(0)
+    mu0 = X[y == 0].mean(0)
+    s = X.std(0) + 1e-9
+    t = jnp.abs(mu1 - mu0) / s
+    return jnp.argsort(-t)[:k]
+
+
+def build_data(scenario: Scenario
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """(X, y, aux): X (m+1, n, p), y (m+1, n); aux carries what the metric
+    needs — the target parameter for synthetic designs, the held-out test
+    split for digits."""
+    if scenario.dataset == "synthetic":
+        X, y = make_shards(jax.random.PRNGKey(scenario.data_seed),
+                           scenario.problem, scenario.m, scenario.n,
+                           scenario.p)
+        return X, y, {"target": target_theta(scenario.p)}
+    if scenario.dataset == "digits":
+        m, n, k = scenario.m, scenario.n, scenario.p
+        n_total = (m + 1) * n + _DIGITS_TEST
+        X, y, _ = digits_like_dataset(scenario.data_seed, n_total,
+                                      pair=scenario.pair)
+        cols = screen_features(X[:_DIGITS_SCREEN], y[:_DIGITS_SCREEN], k)
+        Xs = X[:, cols]
+        Xtr = Xs[:(m + 1) * n].reshape(m + 1, n, -1)
+        ytr = y[:(m + 1) * n].reshape(m + 1, n)
+        return Xtr, ytr, {"Xte": Xs[-_DIGITS_TEST:], "yte": y[-_DIGITS_TEST:]}
+    raise ValueError(f"unknown dataset {scenario.dataset!r}")
+
+
+def compute_metrics(scenario: Scenario, thetas: Dict[str, jnp.ndarray],
+                    aux: Dict) -> Dict[str, float]:
+    """Per-scenario summary metrics from the (reps, p) estimator stacks."""
+    if scenario.dataset == "synthetic":
+        t = aux["target"]
+        return {f"mrse_{name}": monte_carlo_mrse(thetas[name], t)
+                for name in ("cq", "os", "qn")}
+    if scenario.dataset == "digits":
+        Xte, yte = aux["Xte"], aux["yte"]
+        preds = (jax.nn.sigmoid(thetas["qn"] @ Xte.T) > 0.5
+                 ).astype(jnp.float32)
+        return {"accuracy": float((preds == yte[None, :]).mean())}
+    raise ValueError(f"unknown dataset {scenario.dataset!r}")

@@ -1,0 +1,222 @@
+"""The sweep executor: one compiled executable per jit group.
+
+Scenarios are bucketed by ``Scenario.group_key()`` (static config +
+shapes). For each group the executor builds ONE function —
+
+    jit(vmap_scenarios(vmap_replicates(protocol_rounds)))
+
+— and pushes the whole group through it in a single call: the scenario
+axis carries data, Byzantine masks, privacy budgets (as host-calibrated
+``sigma_base`` rows, bit-identical to the compile-once static path), and
+attack factors; the replicate axis carries PRNG keys. A grid over
+eps x alpha x seeds therefore compiles once per (loss, attack, aggregator,
+trust, shape) combination instead of once per point.
+
+``trace_counts`` counts actual retraces per group; tests assert each group
+compiles exactly one executable. Passing a ``mesh`` swaps the machine map
+for the shard_map SPMD implementation (dist/sharded_protocol.py) and
+shards every scenario's machine axis over the mesh — the sweep path and
+the multi-device path are the same code.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import n_transmissions, protocol_rounds, vmap_machines
+from repro.core.protocol import calibrate_sigma_base
+from repro.sweep import artifact as artifact_mod
+from repro.sweep.data import (build_data, byz_mask, compute_metrics,
+                              replicate_keys)
+from repro.sweep.grid import Scenario, group_label, group_scenarios
+
+
+class SweepExecutor:
+    """Runs scenario lists through per-jit-group compiled engines.
+
+    One executor instance caches one engine per group key, so successive
+    ``run`` calls (e.g. a resumed sweep in the same process) reuse compiled
+    executables. ``trace_counts[group_key]`` is the number of times the
+    group's engine was traced — the compile-counter contract is that it
+    stays at 1 no matter how many scenarios or calls ride through it.
+    """
+
+    def __init__(self, mesh=None,
+                 progress: Optional[Callable[[str], None]] = None):
+        self.mesh = mesh
+        if mesh is None:
+            self._mmap = vmap_machines
+        else:
+            from repro.dist.sharded_protocol import machine_map
+            self._mmap = machine_map(mesh, mesh.axis_names[0])
+        self.progress = progress or (lambda msg: None)
+        self.trace_counts: Dict[Tuple, int] = {}
+        self._engines: Dict[Tuple, Callable] = {}
+        self._data_cache: Dict[Tuple, Tuple] = {}
+
+    # ------------------------------------------------------------- engines
+
+    def _engine(self, scenario: Scenario) -> Callable:
+        gkey = scenario.group_key()
+        if gkey in self._engines:
+            return self._engines[gkey]
+        cfg = scenario.protocol_config()
+        problem = _problem_for(scenario)
+        attack = scenario.attack
+        mmap = self._mmap
+        self.trace_counts[gkey] = 0
+
+        def one_rep(key, X, y, mask, eps, delta, factor, sigma_base):
+            self.trace_counts[gkey] += 1
+            return protocol_rounds(
+                key, X, y, problem, cfg, byz_mask=mask, attack=attack,
+                attack_factor=factor, eps=eps, delta=delta,
+                sigma_base=sigma_base, machine_map=mmap)
+
+        over_reps = jax.vmap(one_rep, in_axes=(0,) + (None,) * 7)
+        over_scenarios = jax.vmap(over_reps, in_axes=(0,) * 8)
+        engine = jax.jit(over_scenarios)
+        self._engines[gkey] = engine
+        return engine
+
+    # ------------------------------------------------------------- batching
+
+    def _data_for(self, s: Scenario):
+        """build_data memoized on the fields that determine the arrays —
+        a fig-eps group's five budgets share one dataset, so the shards
+        are built once, not once per scenario."""
+        key = (s.dataset, s.problem, s.m, s.n, s.p, s.data_seed, s.pair)
+        if key not in self._data_cache:
+            self._data_cache[key] = build_data(s)
+        return self._data_cache[key]
+
+    def _batch_inputs(self, scens: List[Scenario]):
+        """Stack the dynamic axes of one jit group. Every scenario gets its
+        own data/mask/budget row; replicate keys ride the inner axis."""
+        X_rows, y_rows, auxes = [], [], []
+        for s in scens:
+            X, y, aux = self._data_for(s)
+            X_rows.append(X)
+            y_rows.append(y)
+            auxes.append(aux)
+        X = jnp.stack(X_rows)
+        y = jnp.stack(y_rows)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            axis = self.mesh.axis_names[0]
+            n_dev = self.mesh.shape[axis]
+            if X.shape[1] % n_dev:
+                raise ValueError(
+                    f"{X.shape[1]} machines do not shard evenly over "
+                    f"{n_dev} devices on axis {axis!r}")
+            spec = NamedSharding(self.mesh, P(None, axis))
+            X = jax.device_put(X, spec)
+            y = jax.device_put(y, spec)
+        keys = jnp.stack([replicate_keys(s) for s in scens])
+        masks = jnp.stack([byz_mask(s) for s in scens])
+        eps = jnp.asarray([s.eps for s in scens], jnp.float32)
+        delta = jnp.asarray([s.delta for s in scens], jnp.float32)
+        factors = jnp.asarray([s.attack_factor for s in scens], jnp.float32)
+        # float64 host calibration per scenario -> bit-parity with the
+        # static compile-once path (see core/protocol.calibrate_sigma_base)
+        sigma_rows = np.stack([
+            np.asarray(calibrate_sigma_base(
+                s.protocol_config(), s.p, s.n), np.float32)
+            for s in scens])
+        return (keys, X, y, masks, eps, delta, factors,
+                jnp.asarray(sigma_rows)), auxes
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, scenarios: Iterable[Scenario],
+            artifact_path: Optional[str] = None, resume: bool = True,
+            store_thetas: bool = True, meta: Optional[Dict] = None) -> Dict:
+        """Execute scenarios group-by-group; returns the artifact dict.
+
+        With ``artifact_path`` the artifact is written atomically after
+        every jit group, and (when ``resume``) scenarios already present
+        in a schema-valid artifact at that path are skipped.
+        """
+        scenarios = list(scenarios)
+        art = artifact_mod.new_artifact(meta=_run_meta(meta))
+        done: set = set()
+        if artifact_path and resume:
+            done = artifact_mod.load_done_ids(artifact_path)
+            if done:
+                art = artifact_mod.load(artifact_path)
+                art["meta"].update(_run_meta(meta))
+        pending = [s for s in scenarios
+                   if s.scenario_id() not in done]
+        skipped = len(scenarios) - len(pending)
+        if skipped:
+            self.progress(f"resume: {skipped} scenario(s) already in "
+                          f"{artifact_path}, {len(pending)} to run")
+        groups = group_scenarios(pending)
+        for gi, (gkey, scens) in enumerate(groups.items()):
+            label = group_label(gkey)
+            self.progress(f"[group {gi + 1}/{len(groups)}] {label}: "
+                          f"{len(scens)} scenario(s) x {scens[0].reps} reps")
+            engine = self._engine(scens[0])
+            inputs, auxes = self._batch_inputs(scens)
+            t0 = time.perf_counter()
+            arrs = engine(*inputs)
+            jax.block_until_ready(arrs.theta_qn)
+            dt = time.perf_counter() - t0
+            for i, (s, aux) in enumerate(zip(scens, auxes)):
+                thetas = {"cq": arrs.theta_cq[i], "os": arrs.theta_os[i],
+                          "qn": arrs.theta_qn[i]}
+                record = {
+                    "scenario": s.to_json(),
+                    "metrics": compute_metrics(s, thetas, aux),
+                    "spend": _spend_record(s, np.asarray(arrs.sigmas[i, 0])),
+                    "thetas_qn": (np.asarray(arrs.theta_qn[i], np.float64)
+                                  .tolist() if store_thetas else None),
+                    "timing": {"group": label, "group_seconds": dt,
+                               "group_size": len(scens),
+                               "traces": self.trace_counts[gkey]},
+                }
+                art["scenarios"][s.scenario_id()] = record
+            if artifact_path:
+                artifact_mod.save(art, artifact_path)
+        artifact_mod.validate(art)
+        return art
+
+
+def run_scenarios(scenarios: Iterable[Scenario], mesh=None,
+                  artifact_path: Optional[str] = None, resume: bool = True,
+                  store_thetas: bool = True, meta: Optional[Dict] = None,
+                  progress: Optional[Callable[[str], None]] = None) -> Dict:
+    """One-shot convenience wrapper around :class:`SweepExecutor`."""
+    executor = SweepExecutor(mesh=mesh, progress=progress)
+    return executor.run(scenarios, artifact_path=artifact_path,
+                        resume=resume, store_thetas=store_thetas, meta=meta)
+
+
+# ---------------------------------------------------------------- internals
+
+def _problem_for(scenario: Scenario):
+    from repro.core import get_problem
+    return get_problem(scenario.problem)
+
+
+def _spend_record(s: Scenario, sigmas: np.ndarray) -> Dict:
+    """Host-side exact privacy spend for the artifact (the traced ledger
+    carries the same numbers as f32; the accountant math stays in float)."""
+    cfg = s.protocol_config()
+    k = n_transmissions(cfg)
+    return {"eps_total": s.eps, "delta_total": s.delta,
+            "n_transmissions": k, "eps_per_round": s.eps / k,
+            "delta_per_round": s.delta / k,
+            "sigmas": [float(v) for v in sigmas]}
+
+
+def _run_meta(meta: Optional[Dict]) -> Dict:
+    out = {"jax": jax.__version__,
+           "device": jax.devices()[0].platform,
+           "n_devices": jax.device_count()}
+    out.update(meta or {})
+    return out

@@ -1,0 +1,202 @@
+"""Declarative scenario grids over the paper's experimental axes.
+
+A ``Scenario`` is one point of the paper's §5 evaluation space — loss
+family x Byzantine attack x robust aggregator x privacy budget eps x
+machine count m x Byzantine fraction alpha x center-trust mode — plus the
+bookkeeping needed to reproduce it exactly (data seed, replicate seeds).
+
+``ScenarioGrid`` expands a Cartesian product of those axes into scenarios;
+``group_scenarios`` buckets them by *jit group key*: the subset of fields
+that is static under jax.jit (shapes + config baked into the trace). Every
+field NOT in the group key — eps, delta, byz_frac, attack_factor, data and
+replicate seeds — rides a vmap axis in the executor, so one compiled
+executable serves the whole group (tests/test_sweep.py asserts exactly one
+trace per group via compile counters).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.configs.base import ProtocolConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One protocol evaluation point. Field groups:
+
+    jit-static (part of the group key — changing them recompiles):
+        problem, m, n, p, reps, attack, aggregator, center_trust, K,
+        trim_beta, gammas, lambda_s, tail, newton_steps, noiseless
+    dynamic (batched along the executor's scenario vmap axis):
+        eps, delta, byz_frac, attack_factor, data_seed, rep_seeds
+    data-only (select which arrays are fed, not how they are traced):
+        dataset, pair
+    """
+    problem: str = "logistic"          # loss family (repro.core.losses)
+    dataset: str = "synthetic"         # synthetic | digits
+    m: int = 50                        # node machines (center is machine 0)
+    n: int = 1000                      # samples per machine
+    p: int = 10                        # parameter dimension
+    eps: float = 30.0                  # total privacy budget
+    delta: float = 0.05
+    byz_frac: float = 0.0              # alpha: fraction of Byzantine machines
+    attack: str = "scale"              # repro.core.byzantine modes | "none"
+    attack_factor: float = -3.0
+    aggregator: str = "dcq"            # dcq | median | trimmed | geomedian | mean
+    center_trust: str = "trusted"      # trusted | untrusted (paper §4.3)
+    K: int = 10
+    trim_beta: float = 0.2
+    gammas: Tuple[float, ...] = (2.0, 2.0, 2.0, 2.0, 2.0)
+    lambda_s: Optional[float] = None
+    tail: str = "subexp"
+    newton_steps: int = 25
+    noiseless: bool = False
+    reps: int = 5                      # Monte-Carlo replicates
+    data_seed: int = 0
+    # Explicit per-replicate PRNG seeds (tuple of ints, len == reps). None
+    # derives deterministic keys from the scenario id, so resumed sweeps
+    # reproduce the same draws.
+    rep_seeds: Optional[Tuple[int, ...]] = None
+    pair: Optional[Tuple[int, int]] = None   # digits dataset class pair
+
+    def __post_init__(self):
+        if self.rep_seeds is not None and len(self.rep_seeds) != self.reps:
+            raise ValueError(
+                f"rep_seeds has {len(self.rep_seeds)} entries for "
+                f"reps={self.reps}")
+        if self.dataset == "digits" and self.pair is None:
+            raise ValueError("digits scenarios need a class `pair`")
+
+    # ------------------------------------------------------------- identity
+
+    def canonical(self) -> Tuple:
+        """Stable full-field tuple (dict ordering is field order)."""
+        return tuple(sorted(
+            (f.name, repr(getattr(self, f.name)))
+            for f in dataclasses.fields(self)))
+
+    def scenario_id(self) -> str:
+        """Human-readable id, unique via a canonical-field hash; stable
+        across processes (used as the resume key in artifacts)."""
+        h = hashlib.sha1(repr(self.canonical()).encode()).hexdigest()[:8]
+        return (f"{self.dataset}-{self.problem}-m{self.m}-n{self.n}"
+                f"-p{self.p}-eps{self.eps:g}-byz{self.byz_frac:g}"
+                f"-{self.attack}-{self.aggregator}-{self.center_trust}-{h}")
+
+    def group_key(self) -> Tuple:
+        """Everything baked into the jit trace: static config + shapes.
+        Scenarios sharing a key share one compiled executable."""
+        return (self.problem, self.m, self.n, self.p, self.reps,
+                self.attack, self.aggregator, self.center_trust, self.K,
+                self.trim_beta, self.gammas, self.lambda_s, self.tail,
+                self.newton_steps, self.noiseless)
+
+    def protocol_config(self) -> ProtocolConfig:
+        """Static protocol config for this scenario's jit group. eps/delta
+        are included for the single-scenario path but are OVERRIDDEN by
+        the executor's dynamic budget axis within a group."""
+        return ProtocolConfig(
+            K=self.K, eps=self.eps, delta=self.delta, gammas=self.gammas,
+            lambda_s=self.lambda_s, tail=self.tail,
+            aggregator=self.aggregator, trim_beta=self.trim_beta,
+            center_trust=self.center_trust, newton_steps=self.newton_steps,
+            noiseless=self.noiseless)
+
+    def n_byzantine(self) -> int:
+        return int(self.byz_frac * self.m)
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        # tuples -> lists happens in json anyway; keep plain dict
+        return d
+
+
+def scenario_from_json(d: Dict) -> Scenario:
+    kw = dict(d)
+    for key in ("gammas", "rep_seeds", "pair"):
+        if kw.get(key) is not None:
+            kw[key] = tuple(kw[key])
+    return Scenario(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioGrid:
+    """Cartesian product over the paper's scenario axes. Axes are tuples;
+    scalars are shared by every expanded scenario."""
+    problems: Tuple[str, ...] = ("logistic",)
+    attacks: Tuple[str, ...] = ("scale",)
+    aggregators: Tuple[str, ...] = ("dcq",)
+    eps_grid: Tuple[float, ...] = (30.0,)
+    m_grid: Tuple[int, ...] = (50,)
+    byz_fracs: Tuple[float, ...] = (0.0,)
+    center_trusts: Tuple[str, ...] = ("trusted",)
+    attack_factors: Tuple[float, ...] = (-3.0,)
+    # shared scalars
+    n: int = 1000
+    p: int = 10
+    reps: int = 5
+    delta: float = 0.05
+    K: int = 10
+    trim_beta: float = 0.2
+    gammas: Tuple[float, ...] = (2.0, 2.0, 2.0, 2.0, 2.0)
+    lambda_s: Optional[float] = None
+    tail: str = "subexp"
+    newton_steps: int = 25
+    noiseless: bool = False
+    data_seed: int = 0
+    # "shared": every scenario reuses PRNGKey(data_seed) per (m, problem);
+    # "per-m": seed = data_seed + m (the mrse_vs_m convention, fresh data
+    # per machine count).
+    data_seed_mode: str = "shared"
+
+    def size(self) -> int:
+        return (len(self.problems) * len(self.attacks)
+                * len(self.aggregators) * len(self.eps_grid)
+                * len(self.m_grid) * len(self.byz_fracs)
+                * len(self.center_trusts) * len(self.attack_factors))
+
+    def expand(self) -> List[Scenario]:
+        if self.data_seed_mode not in ("shared", "per-m"):
+            raise ValueError(f"unknown data_seed_mode {self.data_seed_mode!r}")
+        out = []
+        for (prob, attack, agg, eps, m, byz, trust, factor) in \
+                itertools.product(self.problems, self.attacks,
+                                  self.aggregators, self.eps_grid,
+                                  self.m_grid, self.byz_fracs,
+                                  self.center_trusts, self.attack_factors):
+            seed = (self.data_seed + m if self.data_seed_mode == "per-m"
+                    else self.data_seed)
+            out.append(Scenario(
+                problem=prob, m=m, n=self.n, p=self.p, eps=float(eps),
+                delta=self.delta, byz_frac=byz, attack=attack,
+                attack_factor=factor, aggregator=agg, center_trust=trust,
+                K=self.K, trim_beta=self.trim_beta, gammas=self.gammas,
+                lambda_s=self.lambda_s, tail=self.tail,
+                newton_steps=self.newton_steps, noiseless=self.noiseless,
+                reps=self.reps, data_seed=seed))
+        return out
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def group_scenarios(scenarios: Iterable[Scenario]
+                    ) -> "Dict[Tuple, List[Scenario]]":
+    """Bucket scenarios by jit group key, preserving first-seen order."""
+    groups: Dict[Tuple, List[Scenario]] = {}
+    for s in scenarios:
+        groups.setdefault(s.group_key(), []).append(s)
+    return groups
+
+
+def group_label(key: Tuple) -> str:
+    """Short human-readable tag for a jit group (artifact/timing records)."""
+    problem, m, n, p, reps, attack, agg, trust = key[:8]
+    noiseless = key[-1]
+    tag = f"{problem}-m{m}-n{n}-p{p}-r{reps}-{attack}-{agg}-{trust}"
+    if noiseless:
+        tag += "-noiseless"
+    return tag

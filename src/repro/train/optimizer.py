@@ -29,7 +29,8 @@ class AdamW:
     grad_clip: float = 1.0        # global-norm clip; 0 disables
 
     def init(self, params: Any) -> AdamWState:
-        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        def zeros(p):
+            return jnp.zeros_like(p, dtype=jnp.float32)
         return AdamWState(step=jnp.zeros((), jnp.int32),
                           mu=jax.tree_util.tree_map(zeros, params),
                           nu=jax.tree_util.tree_map(zeros, params))
@@ -93,5 +94,5 @@ def apply_updates(params: Any, updates: Any) -> Any:
 
 def global_norm(tree: Any) -> jnp.ndarray:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))

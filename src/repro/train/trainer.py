@@ -15,14 +15,12 @@ live activations are one layer's, per machine, per microbatch.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig
 from repro.dist.grad_agg import GradAggConfig, robust_aggregate
 from repro.models import sharding as shd
 from repro.models.model import Model
@@ -69,9 +67,9 @@ def make_train_step(model: Model, opt: AdamW, tcfg: TrainConfig,
 
             def acc_step(carry, chunk):
                 lsum, gsum = carry
-                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                (lv, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
                     params, chunk)
-                return (lsum + l / k,
+                return (lsum + lv / k,
                         jax.tree_util.tree_map(
                             lambda a, b: a + b / k, gsum, g)), None
             zero = jax.tree_util.tree_map(

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bfgs import (LBFGSMemory, VOp, bfgs_dir_product,
+from repro.core.bfgs import (LBFGSMemory, bfgs_dir_product,
                              bfgs_inverse_update, lbfgs_two_loop, make_v)
 
 

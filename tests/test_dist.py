@@ -12,7 +12,6 @@ _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.dist.grad_agg import (GradAggConfig, add_dp_noise,
                                  aggregate_machine_axis, corrupt_machines,

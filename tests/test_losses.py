@@ -5,8 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.losses import PROBLEMS, get_problem
-from repro.data.synthetic import (linear_data, logistic_data, poisson_data,
-                                  target_theta)
+from repro.data.synthetic import linear_data, logistic_data, poisson_data
 
 _DATA = {"logistic": logistic_data, "poisson": poisson_data,
          "linear": linear_data, "huber": linear_data}

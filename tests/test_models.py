@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.configs.base import ShapeConfig
 from repro.models import flash, moe, ssm, xlstm
 from repro.models.model import Model
 

@@ -9,7 +9,7 @@ pytest.importorskip("hypothesis",
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dp
-from repro.core.bfgs import bfgs_inverse_update, make_v
+from repro.core.bfgs import bfgs_inverse_update
 from repro.core.dcq import dcq, d_k
 from repro.core.robust_agg import median_agg, trimmed_mean_agg
 

@@ -1,6 +1,5 @@
 """Roofline machinery unit tests: HLO collective parser, layer
 extrapolation, param counting, model-FLOP accounting."""
-import jax
 import pytest
 
 from repro.configs import SHAPES, get_config

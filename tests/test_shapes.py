@@ -52,8 +52,8 @@ def test_long_500k_cache_is_bounded():
         cfg = adapt_config(get_config(arch), shape)
         specs = input_specs(cfg, shape)
         leaves = jax.tree_util.tree_leaves(specs["cache"])
-        total = sum(int(jnp.prod(jnp.array(l.shape))) * l.dtype.itemsize
-                    for l in leaves)
+        total = sum(int(jnp.prod(jnp.array(leaf.shape))) * leaf.dtype.itemsize
+                    for leaf in leaves)
         # < 40 GiB global (i.e. window- or state-bounded, not 500k-bounded)
         assert total < 40 * 2**30, (arch, total)
 
