@@ -8,8 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.dcq import are_dcq, d_k, dcq, ARE_MEDIAN
-from repro.core.robust_agg import trimmed_mean_agg
+from repro.agg import ARE_MEDIAN, are_dcq, d_k, dcq, trimmed_mean_agg
 
 
 def monte_carlo_are(m: int = 500, reps: int = 2000, K: int = 10,

@@ -1,20 +1,23 @@
-"""Benchmark regression gate: compare a fresh BENCH_protocol.json against
-the committed baseline and fail on a steady-state slowdown of the compiled
-path.
+"""Benchmark regression gates: compare fresh BENCH_protocol.json /
+BENCH_agg.json records against the committed baselines and fail on a
+steady-state slowdown of a compiled hot path.
 
     python -m benchmarks.check_regression \
         --fresh BENCH_protocol.json \
-        --baseline benchmarks/baselines/BENCH_protocol_fast.json
+        --baseline benchmarks/baselines/BENCH_protocol_fast.json \
+        --fresh-agg BENCH_agg.json \
+        --baseline-agg benchmarks/baselines/BENCH_agg_fast.json
 
 A real engine regression (lost jit cache, accidental host sync, eager
-fallback) degrades BOTH signals below; a slower CI machine degrades only
-the first. The gate therefore fails only when both regress by more than
-``--factor`` (default 2x):
+fallback, a de-batched aggregation path) degrades BOTH signals below; a
+slower CI machine degrades only the first. Each gate therefore fails only
+when both regress by more than ``--factor`` (default 2x):
 
-  1. wall-clock: fresh compiled_steady_s vs baseline (same-machine noise +
-     cross-machine speed differences land here);
-  2. normalized: speedup_steady = eager / compiled measured on the SAME
-     machine in the same run, so hardware cancels out.
+  1. wall-clock: fresh steady-state seconds vs baseline (same-machine
+     noise + cross-machine speed differences land here);
+  2. normalized: the speedup over the in-run reference (eager protocol /
+     per-scenario sorted loop) measured on the SAME machine in the same
+     run, so hardware cancels out.
 
 Both signals are only meaningful when the fresh run used the same
 benchmark setting as the baseline; a setting mismatch fails the gate
@@ -26,49 +29,79 @@ import argparse
 import json
 import sys
 
-#: setting keys that must match for wall-clock times to be comparable
-_SETTING_KEYS = ("problem", "m", "n", "p", "eps", "reps")
 
-
-def compare(fresh: dict, baseline: dict, factor: float = 2.0) -> list:
-    """Return a list of failure messages (empty = gate passes)."""
+def _two_signal_gate(fresh: dict, baseline: dict, factor: float, *,
+                     setting_keys, wall_key: str, speedup_key: str,
+                     label: str, speedup_label: str, ok_msg: str,
+                     regen_cmd: str) -> list:
+    """The shared gate: fail only when the wall-clock AND the in-run
+    normalized speedup both regress past ``factor``; a setting mismatch
+    or a fresh ``ok=false`` fails outright."""
     fs, bs = fresh["setting"], baseline["setting"]
-    comparable = all(fs.get(k) == bs.get(k) for k in _SETTING_KEYS)
+    comparable = all(fs.get(k) == bs.get(k) for k in setting_keys)
 
-    wall_ratio = fresh["compiled_steady_s"] / baseline["compiled_steady_s"]
-    speed_ratio = baseline["speedup_steady"] / fresh["speedup_steady"]
-    print(f"settings comparable: {comparable} "
-          f"({ {k: fs.get(k) for k in _SETTING_KEYS} })")
-    print(f"compiled steady-state: fresh {fresh['compiled_steady_s']:.4f}s "
-          f"vs baseline {baseline['compiled_steady_s']:.4f}s "
-          f"({wall_ratio:.2f}x)")
-    print(f"eager->compiled speedup: fresh {fresh['speedup_steady']:.1f}x "
-          f"vs baseline {baseline['speedup_steady']:.1f}x "
-          f"(regression {speed_ratio:.2f}x)")
+    wall_ratio = fresh[wall_key] / baseline[wall_key]
+    speed_ratio = baseline[speedup_key] / fresh[speedup_key]
+    print(f"{label} settings comparable: {comparable} "
+          f"({ {k: fs.get(k) for k in setting_keys} })")
+    print(f"{label} steady-state: fresh {fresh[wall_key]:.4f}s vs baseline "
+          f"{baseline[wall_key]:.4f}s ({wall_ratio:.2f}x)")
+    print(f"{speedup_label}: fresh {fresh[speedup_key]:.1f}x vs baseline "
+          f"{baseline[speedup_key]:.1f}x (regression {speed_ratio:.2f}x)")
 
     failures = []
     if comparable and wall_ratio > factor and speed_ratio > factor:
         failures.append(
-            f"compiled path regressed: steady-state wall-clock {wall_ratio:.2f}x "
+            f"{label} regressed: steady-state wall-clock {wall_ratio:.2f}x "
             f"slower AND same-machine speedup collapsed {speed_ratio:.2f}x "
             f"(threshold {factor}x)")
     if not comparable:
-        # Both signals are setting-dependent (the eager/compiled ratio grows
-        # with problem size), so a cross-setting comparison would misfire —
-        # and silently skipping it would turn the gate into a no-op forever.
-        # Fail loudly: whoever changed the benchmark setting must regenerate
-        # the committed baseline in the same commit.
+        # Both signals are setting-dependent (the speedup ratio grows with
+        # problem size), so a cross-setting comparison would misfire — and
+        # silently skipping it would turn the gate into a no-op forever.
+        # Fail loudly: whoever changed the benchmark setting must
+        # regenerate the committed baseline in the same commit.
         failures.append(
-            "benchmark settings differ from the committed baseline, so the "
-            "ratio gates cannot run; regenerate it via "
-            "`python -m benchmarks.bench_protocol --fast && "
-            "cp BENCH_protocol.json benchmarks/baselines/"
-            "BENCH_protocol_fast.json` (then `git checkout "
-            "BENCH_protocol.json`)")
+            f"{label} benchmark settings differ from the committed "
+            f"baseline, so the ratio gates cannot run; regenerate it via "
+            f"`{regen_cmd}`")
     if not fresh.get("ok", False):
-        failures.append("fresh benchmark reported ok=false "
-                        "(compiled steady-state < 3x eager)")
+        failures.append(f"fresh {label} benchmark reported ok=false "
+                        f"({ok_msg})")
     return failures
+
+
+def compare(fresh: dict, baseline: dict, factor: float = 2.0) -> list:
+    """Gate for the compiled-protocol record (BENCH_protocol.json).
+    Returns a list of failure messages (empty = gate passes)."""
+    return _two_signal_gate(
+        fresh, baseline, factor,
+        setting_keys=("problem", "m", "n", "p", "eps", "reps"),
+        wall_key="compiled_steady_s", speedup_key="speedup_steady",
+        label="compiled protocol",
+        speedup_label="eager->compiled speedup",
+        ok_msg="compiled steady-state < 3x eager",
+        regen_cmd="python -m benchmarks.bench_protocol --fast && "
+                  "cp BENCH_protocol.json benchmarks/baselines/"
+                  "BENCH_protocol_fast.json (then git checkout "
+                  "BENCH_protocol.json)")
+
+
+def compare_agg(fresh: dict, baseline: dict, factor: float = 2.0) -> list:
+    """Gate for the batched-aggregation record (BENCH_agg.json,
+    kernel_bench.bench_batched_agg): batched-pallas wall time and its
+    same-machine speedup over the per-scenario sorted loop."""
+    return _two_signal_gate(
+        fresh, baseline, factor,
+        setting_keys=("B", "m", "p", "K", "reps"),
+        wall_key="batched_pallas_s", speedup_key="speedup_pallas_vs_loop",
+        label="batched aggregation",
+        speedup_label="speedup vs per-scenario sorted loop",
+        ok_msg="one fused batched launch no longer beats the per-scenario "
+               "sorted loop",
+        regen_cmd="python -m benchmarks.kernel_bench --fast && "
+                  "cp BENCH_agg.json benchmarks/baselines/"
+                  "BENCH_agg_fast.json (then git checkout BENCH_agg.json)")
 
 
 def main(argv=None) -> int:
@@ -76,6 +109,10 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh", default="BENCH_protocol.json")
     ap.add_argument("--baseline",
                     default="benchmarks/baselines/BENCH_protocol_fast.json")
+    ap.add_argument("--fresh-agg", default=None,
+                    help="fresh BENCH_agg.json (omit to skip the agg gate)")
+    ap.add_argument("--baseline-agg",
+                    default="benchmarks/baselines/BENCH_agg_fast.json")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max tolerated slowdown (default 2x)")
     args = ap.parse_args(argv)
@@ -84,6 +121,13 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
     failures = compare(fresh, baseline, factor=args.factor)
+    if args.fresh_agg:
+        with open(args.fresh_agg) as f:
+            fresh_agg = json.load(f)
+        with open(args.baseline_agg) as f:
+            baseline_agg = json.load(f)
+        failures += compare_agg(fresh_agg, baseline_agg,
+                                factor=args.factor)
     for msg in failures:
         print(f"REGRESSION: {msg}", file=sys.stderr)
     print("PASS" if not failures else "FAIL")

@@ -9,6 +9,9 @@ total (eps, delta):
 
 plus the measured MRSE at equal budget, and the per-vector noise sigma the
 budget forces (Thm 4.5) — the paper's core budget argument made concrete.
+
+The byte model lives in repro/sweep/comm.py (shared with the sweep
+artifact, which stamps the same numbers into every scenario record).
 """
 from __future__ import annotations
 
@@ -19,6 +22,9 @@ from repro.configs.base import ProtocolConfig
 from repro.core import DPQNProtocol, dp, get_problem
 from repro.core.baselines import gd_estimator, newton_estimator
 from repro.data.synthetic import make_shards, target_theta
+from repro.sweep.comm import (gd_bytes_per_machine,
+                              newton_bytes_per_machine,
+                              qn_bytes_per_machine)
 
 
 def main(fast: bool = False):
@@ -29,10 +35,10 @@ def main(fast: bool = False):
     prob = get_problem("logistic")
     cfg = ProtocolConfig(eps=30.0, delta=0.05)
 
-    qn_bytes = 4 * 5 * p
-    newton_bytes = 4 * (2 * p + p * p)
+    qn_bytes = qn_bytes_per_machine(p, cfg)
+    newton_bytes = newton_bytes_per_machine(p)
     gd_rounds = 20
-    gd_bytes = 4 * p * gd_rounds
+    gd_bytes = gd_bytes_per_machine(p, gd_rounds)
 
     def avg(f):
         return sum(f(r) for r in range(reps)) / reps
@@ -67,10 +73,13 @@ def main(fast: bool = False):
     # the paper's budget argument is asymptotic in p: at p=100 the Hessian
     # round dwarfs any vector strategy
     p_big = 100
-    print(f"at p={p_big}: qN {4*5*p_big} B, GD(20) {4*20*p_big} B, "
-          f"Newton {4*(2*p_big+p_big*p_big)} B per machine")
+    qn_big = qn_bytes_per_machine(p_big, cfg)
+    gd_big = gd_bytes_per_machine(p_big, gd_rounds)
+    nt_big = newton_bytes_per_machine(p_big)
+    print(f"at p={p_big}: qN {qn_big} B, GD(20) {gd_big} B, "
+          f"Newton {nt_big} B per machine")
     ok = (qn_bytes < gd_bytes and qn_bytes < newton_bytes
-          and 4 * 5 * p_big < 4 * 20 * p_big < 4 * (2 * p_big + p_big ** 2)
+          and qn_big < gd_big < nt_big
           and err_qn < err_nt and ea <= eb)
     print("PASS" if ok else "FAIL")
     return {"qn": [qn_bytes, err_qn], "newton": [newton_bytes, err_nt],

@@ -1,19 +1,34 @@
 """Kernel micro-benchmarks: jnp oracle vs Pallas(interpret) correctness at
-bench shapes + HLO-derived arithmetic-intensity notes for the TPU target.
+bench shapes + HLO-derived arithmetic-intensity notes for the TPU target,
+plus the BATCHED-AGGREGATION benchmark that gates the sweep hot path.
 
 Wall-times on CPU interpret mode are NOT TPU performance — the meaningful
 numbers here are bytes/FLOPs per call (printed for the roofline narrative)
-and the correctness deltas at production-like shapes.
+and the correctness deltas at production-like shapes. The batched section
+IS a real CPU measurement though: it times the sweep engine's aggregation
+regime (many small (m, p) problems) three ways —
+
+  loop_sorted     one jitted sorted-jnp call per batch row (the
+                  per-scenario fallback the repro.agg refactor removed)
+  batched_sorted  one jit(vmap(sorted-jnp)) launch
+  batched_pallas  ONE generalized order-statistics kernel launch with the
+                  batch mapped onto the Pallas grid (interpret off-TPU)
+
+and writes BENCH_agg.json; benchmarks/check_regression.py gates the
+committed baseline (benchmarks/baselines/BENCH_agg_fast.json) against it.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dcq import dcq_pallas
-from repro.kernels.dcq_ref import dcq_mad_reference
+from repro import agg
+from repro.agg import aggregate, ostat_pallas, registered
+from repro.agg.reference import dcq_mad_reference
 from repro.kernels.gqa_decode import gqa_decode_pallas
 from repro.kernels.gqa_decode_ref import gqa_decode_reference
 
@@ -27,22 +42,103 @@ def _time(f, *args, reps=3):
     return (time.time() - t0) / reps
 
 
-def main(fast: bool = False):
-    print("== DCQ aggregation kernel (m x p -> p) ==")
+def bench_batched_agg(fast: bool = False, out_path: str = "BENCH_agg.json"):
+    """Batched aggregation at the sweep engine's regime: B small (m, p)
+    problems per launch (B = scenarios x replicates). Steady-state
+    measurement; the regression signals are the batched-pallas wall time
+    and its same-machine speedup over the per-row sorted loop."""
+    B, m, p = (96, 8, 10) if fast else (320, 8, 10)
+    K, reps = 10, 5
+    v = jax.random.normal(jax.random.PRNGKey(0), (B, m, p))
+
+    ref_one = jax.jit(dcq_mad_reference)
+    ref_batched = jax.jit(jax.vmap(dcq_mad_reference))
+
+    def loop_sorted():
+        outs = [ref_one(v[b]) for b in range(B)]
+        jax.block_until_ready(outs[-1])
+        return outs
+
+    def batched_sorted():
+        out = ref_batched(v)
+        jax.block_until_ready(out)
+        return out
+
+    def batched_pallas():
+        out = ostat_pallas(v, "dcq_mad", K=K)
+        jax.block_until_ready(out)
+        return out
+
+    # correctness at the bench shape before timing anything
+    err = float(jnp.abs(jnp.stack(loop_sorted()) - batched_pallas()).max())
+    assert err < 5e-4, f"batched kernel disagrees with oracle: {err}"
+
+    def steady(f):
+        f()                                     # warm the jit caches
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            f()
+        return (time.perf_counter() - t0) / reps
+
+    t_loop = steady(loop_sorted)
+    t_batched = steady(batched_sorted)
+    t_pallas = steady(batched_pallas)
+    result = {
+        "setting": {"B": B, "m": m, "p": p, "K": K, "reps": reps,
+                    "device": jax.devices()[0].platform,
+                    "jax": jax.__version__},
+        "max_err_vs_oracle": err,
+        "loop_sorted_s": t_loop,
+        "batched_sorted_s": t_batched,
+        "batched_pallas_s": t_pallas,
+        "speedup_pallas_vs_loop": t_loop / t_pallas,
+        "speedup_batched_vs_loop": t_loop / t_batched,
+        # the gate condition: one fused batched-kernel launch beats the
+        # per-scenario sorted fallback it replaced
+        "ok": t_pallas < t_loop,
+    }
+    print(f"  B={B} m={m} p={p}: loop_sorted={t_loop*1e3:8.2f}ms  "
+          f"batched_sorted={t_batched*1e3:7.2f}ms  "
+          f"batched_pallas={t_pallas*1e3:7.2f}ms")
+    print(f"  batched-pallas speedup vs per-scenario sorted loop: "
+          f"{result['speedup_pallas_vs_loop']:.2f}x "
+          f"(batched-sorted: {result['speedup_batched_vs_loop']:.2f}x)  "
+          f"max|err|={err:.2e}  {'PASS' if result['ok'] else 'FAIL'}")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"  wrote {out_path}")
+    return result
+
+
+def main(fast: bool = False, agg_out: str = "BENCH_agg.json"):
+    print("== registered aggregators: Pallas kernel vs jnp reference ==")
     out = {}
-    for m, p in [(16, 4096), (64, 16384)] if not fast else [(16, 2048)]:
-        v = jax.random.normal(jax.random.PRNGKey(0), (m, p))
-        ref = dcq_mad_reference(v)
-        ker = dcq_pallas(v, tile=512)
-        err = float(jnp.abs(ref - ker).max())
+    shapes = [(16, 4096), (64, 16384)] if not fast else [(16, 2048)]
+    pallas_aggs = tuple(n for n in registered() if agg.has_pallas(n))
+    for m, p in shapes:
+        v = jax.random.normal(jax.random.PRNGKey(0), (m, p)) * 2.5
+        errs = {}
+        for method in pallas_aggs:
+            scale = (jnp.abs(jax.random.normal(jax.random.PRNGKey(1),
+                                               (p,))) + 0.1
+                     if agg.get_aggregator(method).needs_scale else None)
+            ref = aggregate(v, method, scale=scale, backend="reference")
+            ker = aggregate(v, method, scale=scale, backend="pallas")
+            errs[method] = float(jnp.abs(ref - ker).max())
         t_ref = _time(jax.jit(dcq_mad_reference), v)
         io_bytes = (m * p + p) * 4
         flops_est = 2 * 60 * m * p + 10 * m * p     # bisection + CQ sums
         ai = flops_est / io_bytes
-        print(f"  m={m:4d} p={p:6d}: max|err|={err:.2e}  "
-              f"jnp_oracle={t_ref*1e3:7.2f}ms  "
+        worst = max(errs.values())
+        print(f"  m={m:4d} p={p:6d}: max|err|={worst:.2e} over "
+              f"{len(errs)} aggregators  jnp_oracle(dcq_mad)="
+              f"{t_ref*1e3:7.2f}ms  "
               f"arith-intensity~{ai:.1f} flop/byte (VPU-bound)")
-        out[f"dcq_{m}x{p}"] = {"err": err, "ai": ai}
+        out[f"agg_{m}x{p}"] = {"errs": errs, "ai": ai}
+
+    print("== batched aggregation (the sweep hot path) ==")
+    out["batched_agg"] = bench_batched_agg(fast=fast, out_path=agg_out)
 
     print("== GQA flash-decode kernel (1 token vs cache) ==")
     for B, S, Hq, Hkv, Dh in ([(8, 4096, 32, 8, 128)] if not fast
@@ -67,4 +163,10 @@ def main(fast: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced shapes (CI smoke)")
+    ap.add_argument("--agg-out", default="BENCH_agg.json",
+                    help="batched-aggregation benchmark record path")
+    args = ap.parse_args()
+    main(fast=args.fast, agg_out=args.agg_out)

@@ -1,5 +1,9 @@
-"""The paper's contribution: DCQ aggregation + DP quasi-Newton protocol."""
-from repro.core.dcq import dcq, dcq_with_sigma, d_k, are_dcq, ARE_MEDIAN
+"""The paper's contribution: DCQ aggregation + DP quasi-Newton protocol.
+
+Aggregation lives in ``repro.agg`` (registry + reference + Pallas kernel);
+the historical names are re-exported here unchanged.
+"""
+from repro.agg import dcq, dcq_with_sigma, d_k, are_dcq, ARE_MEDIAN
 from repro.core.robust_agg import aggregate
 from repro.core.protocol import (DPQNProtocol, ProtocolArrays, ProtocolResult,
                                  calibrate_sigma_base, monte_carlo_mrse,

@@ -19,11 +19,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.agg import aggregate
 from repro.configs.base import ProtocolConfig
 from repro.core import byzantine as byz
 from repro.core import dp, local
 from repro.core.losses import MEstimationProblem
-from repro.core.robust_agg import aggregate
 
 
 @dataclasses.dataclass

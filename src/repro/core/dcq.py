@@ -1,103 +1,15 @@
-"""Distributed Composite Quantile (DCQ) estimation — paper §3, eq. (3.1)/(4.4).
+"""DEPRECATED shim — the DCQ estimator and its efficiency theory moved to
+``repro.agg.reference`` (paper §3, eq. (3.1)/(4.4); centred D_K form, see
+the docstrings there and DESIGN.md §1).
 
-Given m machine-local statistics ``Y_1..Y_m`` whose sampling distribution is
-(asymptotically) ``mu + scale * Z`` with ``Z ~ G`` (standard normal here),
-the DCQ estimator sharpens the coordinate-wise median with a composite
-quantile correction:
-
-    med  = med{Y_j}
-    S    = sum_k sum_j [ I(Y_j <= med + scale*Delta_k) - kappa_k ]
-    DCQ  = med - scale * S / (m * sum_k g(Delta_k))
-
-with ``kappa_k = k/(K+1)`` and ``Delta_k = G^{-1}(kappa_k)``.
-
-Asymptotics (Thm 3.1): sqrt(m)(DCQ - mu)/sigma_cq -> N(0,1) with
-``sigma_cq^2 = D_K * scale^2``. NOTE: the paper's printed D_K omits the
-``- kappa_{k1} kappa_{k2}`` centring term; the centred form (used in
-Thm 4.3's V_{g,vr} and required to reproduce ARE 3/pi ~= 0.955) is
-
-    D_K = sum_{k1,k2} [min(k1,k2)/(K+1) - k1*k2/(K+1)^2] / {sum_k psi(Delta_k)}^2.
-
-We implement the centred form (see DESIGN.md §1).
+Import from ``repro.agg`` in new code; this module re-exports the
+historical names so pinned imports keep working.
 """
 from __future__ import annotations
 
-import functools
+from repro.agg.reference import (ARE_MEDIAN, are_dcq, d_k, dcq,  # noqa: F401
+                                 dcq_jit, dcq_with_sigma, quantile_knots,
+                                 quantile_levels)
 
-import jax
-import jax.numpy as jnp
-from jax.scipy.special import ndtri  # Psi^{-1}
-from jax.scipy.stats import norm
-
-
-def quantile_levels(K: int) -> jnp.ndarray:
-    """kappa_k = k/(K+1), k = 1..K."""
-    return jnp.arange(1, K + 1, dtype=jnp.float64 if jax.config.jax_enable_x64
-                      else jnp.float32) / (K + 1)
-
-
-def quantile_knots(K: int) -> jnp.ndarray:
-    """Delta_k = Psi^{-1}(kappa_k) for the standard-normal reference G."""
-    return ndtri(quantile_levels(K))
-
-
-def d_k(K: int) -> float:
-    """Variance inflation D_K of the DCQ estimator vs the mean (centred form).
-
-    ARE(DCQ vs mean) = 1/D_K ; K -> inf gives D_K -> pi/3 (ARE 3/pi ~ 0.955).
-    """
-    kappa = quantile_levels(K)
-    delta = quantile_knots(K)
-    num = (jnp.minimum(kappa[:, None], kappa[None, :])
-           - kappa[:, None] * kappa[None, :]).sum()
-    den = norm.pdf(delta).sum() ** 2
-    return float(num / den)
-
-
-def are_dcq(K: int) -> float:
-    """Asymptotic relative efficiency of DCQ vs the sample mean."""
-    return 1.0 / d_k(K)
-
-
-ARE_MEDIAN = 2.0 / jnp.pi  # ~0.637, quoted in the paper §1
-
-
-def dcq(values: jnp.ndarray, scale: jnp.ndarray, K: int = 10,
-        axis: int = 0) -> jnp.ndarray:
-    """Coordinate-wise DCQ estimate over the machine axis.
-
-    Args:
-      values: array with the machine axis at ``axis`` (e.g. (m, p)).
-      scale: per-coordinate standard deviation of one machine's statistic
-        (shape = values.shape without ``axis``). In the protocol this is
-        ``sigma_hat_b / sqrt(n)`` etc. — the caller supplies the final scale.
-      K: number of composite quantile levels.
-      axis: machine axis.
-
-    Returns: DCQ estimate, shape = values.shape without ``axis``.
-    """
-    values = jnp.moveaxis(values, axis, 0)
-    m = values.shape[0]
-    med = jnp.median(values, axis=0)
-    delta = quantile_knots(K).astype(values.dtype)          # (K,)
-    kappa = quantile_levels(K).astype(values.dtype)         # (K,)
-    # thresholds: med + scale * Delta_k  -> (K, ...)
-    thr = med[None] + scale[None] * delta.reshape((K,) + (1,) * med.ndim)
-    ind = (values[None, :] <= thr[:, None]).astype(values.dtype)  # (K, m, ...)
-    s = (ind - kappa.reshape((K,) + (1,) * values.ndim)).sum(axis=(0, 1))
-    denom = m * norm.pdf(delta).sum().astype(values.dtype)
-    return med - scale * s / denom
-
-
-def dcq_with_sigma(values: jnp.ndarray, scale: jnp.ndarray, K: int = 10,
-                   axis: int = 0):
-    """DCQ estimate plus its asymptotic s.d. sigma_cq/sqrt(m) (Thm 3.1)."""
-    est = dcq(values, scale, K=K, axis=axis)
-    m = values.shape[axis]
-    sd = jnp.sqrt(jnp.asarray(d_k(K), values.dtype)) * scale / jnp.sqrt(m)
-    return est, sd
-
-
-@functools.partial(jax.jit, static_argnames=("K", "axis"))
-def dcq_jit(values, scale, K: int = 10, axis: int = 0):
-    return dcq(values, scale, K=K, axis=axis)
+__all__ = ["quantile_levels", "quantile_knots", "d_k", "are_dcq",
+           "ARE_MEDIAN", "dcq", "dcq_with_sigma", "dcq_jit"]

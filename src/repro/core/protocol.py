@@ -9,6 +9,12 @@ pluggable ``machine_map`` (default: jax.vmap); the shard_map SPMD version
 central math below verbatim, so the two agree up to collective reduction
 order (tested in tests/test_dist.py).
 
+Every center-side reduction — the per-round aggregation AND the
+untrusted-center median/variance plug-ins — routes through the
+``repro.agg`` registry (jnp reference off-TPU, the batched Pallas
+order-statistics kernel on TPU), so the protocol inherits any newly
+registered aggregator via ``cfg.aggregator``.
+
 Round structure (five p-vector transmissions):
   R1  theta_hat_j + b1          -> DCQ -> theta_cq            (4.2)/(4.4)
   R2  grad_j(theta_cq) + b2     -> DCQ -> g_cq                (4.6)
@@ -42,12 +48,12 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.agg import aggregate, median_deviation_variance
 from repro.configs.base import ProtocolConfig
 from repro.core import byzantine as byz
 from repro.core import dp, local
 from repro.core.bfgs import VOp, make_v
 from repro.core.losses import MEstimationProblem
-from repro.core.robust_agg import aggregate
 
 
 def vmap_machines(fn, *machine_args, bcast=()):
@@ -248,14 +254,14 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
         lam_j = jnp.full((m_plus_1,), cfg.lambda_s, X.dtype)
     s1_base = sb["R1 theta"]
     s1_j = s1_base / lam_j                         # per-machine sd
-    s1 = jnp.median(s1_j)                          # reported/summary value
+    s1 = aggregate(s1_j, "median")                 # reported/summary value
     theta_dp = theta_local if cfg.noiseless else (
         theta_local + s1_j[:, None]
         * jax.random.normal(keys[0], theta_local.shape, X.dtype))
     theta_dp = corrupt(theta_dp, keys[1])
     sig.append(s1)
 
-    theta_med = jnp.median(theta_dp, axis=0)
+    theta_med = aggregate(theta_dp, "median", axis=0)
     if cfg.center_trust == "trusted":
         sig2 = local.sandwich_diag_variance(prob, theta_med, Xc, yc)
     else:
@@ -293,7 +299,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
         node_gvar = byz.apply_attack(node_gvar, byz_mask[1:],
                                      attack=attack, factor=attack_factor,
                                      key=keys[5])
-        gvar = jnp.median(node_gvar, axis=0)
+        gvar = aggregate(node_gvar, "median", axis=0)
         sig.append(s6)
     scale2 = jnp.sqrt(jnp.maximum(gvar, 1e-12) + n * s2_eff ** 2) / jnp.sqrt(n)
     g_cq = _agg_for(cfg, "grad", grads_dp, scale2)
@@ -314,8 +320,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     if cfg.center_trust == "trusted":
         hvar = local.newton_dir_variance(prob, theta_cq, Xc, yc, g_cq)
     else:
-        hvar = jnp.maximum(jnp.median(
-            (dirs_dp - jnp.median(dirs_dp, 0)) ** 2, 0) * n, 1e-12)
+        hvar = median_deviation_variance(dirs_dp, n)
     s3_0 = (s3 / lam_j[0]) * jnp.linalg.norm(dirs[0])
     scale3 = jnp.sqrt(jnp.maximum(hvar, 1e-12) + n * s3_0 ** 2) / jnp.sqrt(n)
     H1 = _agg_for(cfg, "dir", dirs_dp, scale3)
@@ -339,8 +344,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
         gdvar = jnp.var(gd, axis=0)
         gosvar = local.grad_coordinate_variance(prob, theta_os, Xc, yc)
     else:
-        gdvar = jnp.maximum(jnp.median(
-            (gdiff_dp - jnp.median(gdiff_dp, 0)) ** 2, 0) * n, 1e-12)
+        gdvar = median_deviation_variance(gdiff_dp, n)
         gosvar = gvar
     scale4 = jnp.sqrt(jnp.maximum(gdvar, 1e-12)
                       + n * s4_eff ** 2) / jnp.sqrt(n)
@@ -369,8 +373,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     if cfg.center_trust == "trusted":
         h3var = local.bfgs_dir_variance(prob, theta_cq, Xc, yc, v, g_os)
     else:
-        h3var = jnp.maximum(jnp.median(
-            (h3_dp - jnp.median(h3_dp, 0)) ** 2, 0) * n, 1e-12)
+        h3var = median_deviation_variance(h3_dp, n)
     s5_0 = s5 * jnp.linalg.norm(h3[0])
     scale5 = jnp.sqrt(jnp.maximum(h3var, 1e-12) + n * s5_0 ** 2) / jnp.sqrt(n)
     h3_agg = _agg_for(cfg, "h3", h3_dp, scale5)

@@ -1,76 +1,24 @@
-"""Robust aggregation baselines the paper compares against (§1.1).
+"""DEPRECATED shim — the robust aggregation baselines moved to
+``repro.agg`` (the unified registry-backed aggregation subsystem).
 
-Coordinate-wise median (Yin et al. 2018), trimmed mean (Yin et al. 2018/19),
-geometric median (Chen et al. 2017), and the non-robust mean. All operate
-over a leading machine axis and serve two consumers: the convex protocol
-(core/protocol.py) and the training-time gradient aggregator
-(repro.dist.grad_agg.aggregate_machine_axis dispatches here for every
-method except its MAD-scaled DCQ path).
+Import ``repro.agg.aggregate`` / ``repro.agg.reference`` in new code;
+this module re-exports the historical names so pinned imports keep
+working. See README "repro.agg" for the migration note.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.dcq import dcq
-
-
-def mean_agg(values, axis: int = 0):
-    return jnp.mean(values, axis=axis)
-
-
-def median_agg(values, axis: int = 0):
-    return jnp.median(values, axis=axis)
-
-
-def trimmed_mean_agg(values, beta: float = 0.2, axis: int = 0):
-    """Coordinate-wise beta-trimmed mean (Yin et al. 2018 convention): drop
-    the floor(beta*m) smallest AND the floor(beta*m) largest entries per
-    coordinate, keeping the central (1-2*beta) fraction. Robust to an
-    alpha-fraction of Byzantine machines whenever beta >= alpha; on clean
-    normal data ARE = 1 - 2*beta relative to the mean (so beta must be
-    < 1/2)."""
-    values = jnp.moveaxis(values, axis, 0)
-    m = values.shape[0]
-    g = max(int(beta * m), 0)
-    srt = jnp.sort(values, axis=0)
-    if 2 * g >= m:
-        raise ValueError(f"trim fraction {beta} too large for m={m}")
-    kept = srt[g:m - g]
-    return kept.mean(axis=0)
-
-
-def geometric_median_agg(values, axis: int = 0, iters: int = 50,
-                         eps: float = 1e-8):
-    """Weiszfeld iteration for the geometric median of m vectors."""
-    values = jnp.moveaxis(values, axis, 0)          # (m, ...)
-    m = values.shape[0]
-    flat = values.reshape(m, -1)
-
-    def step(z, _):
-        d = jnp.linalg.norm(flat - z[None], axis=1)
-        w = 1.0 / jnp.maximum(d, eps)
-        z_new = (w[:, None] * flat).sum(0) / w.sum()
-        return z_new, None
-
-    z0 = jnp.median(flat, axis=0)
-    z, _ = jax.lax.scan(step, z0, None, length=iters)
-    return z.reshape(values.shape[1:])
+from repro.agg.reference import (geometric_median_agg, mean_agg,  # noqa: F401
+                                 median_agg, trimmed_mean_agg)
 
 
 def aggregate(values, method: str = "dcq", scale=None, K: int = 10,
               trim_beta: float = 0.2, axis: int = 0):
-    """Dispatch table used by the protocol and the gradient aggregator."""
-    if method == "mean":
-        return mean_agg(values, axis=axis)
-    if method == "median":
-        return median_agg(values, axis=axis)
-    if method == "trimmed":
-        return trimmed_mean_agg(values, beta=trim_beta, axis=axis)
-    if method == "geomedian":
-        return geometric_median_agg(values, axis=axis)
-    if method == "dcq":
-        if scale is None:
-            raise ValueError("DCQ needs a per-coordinate scale")
-        return dcq(values, scale, K=K, axis=axis)
-    raise ValueError(f"unknown aggregator {method!r}")
+    """Historical dispatch table; now routes through the repro.agg
+    registry (reference backend, preserving the pre-registry numerics)."""
+    from repro.agg import aggregate as _aggregate
+    try:
+        return _aggregate(values, method, scale=scale, K=K,
+                          trim_beta=trim_beta, axis=axis,
+                          backend="reference")
+    except KeyError as e:            # historical contract raised ValueError
+        raise ValueError(str(e)) from None

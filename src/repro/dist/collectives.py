@@ -24,6 +24,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.agg import get_aggregator
 from repro.compat import shard_map
 from repro.dist.grad_agg import GradAggConfig, aggregate_machine_axis
 
@@ -48,11 +49,20 @@ def sharded_aggregate_leaf(values: jax.Array, cfg: GradAggConfig,
         # machine axis replicated: nothing to gather, aggregate in place
         return aggregate_machine_axis(values, cfg)
     rest = P(*spec[1:])
-    if cfg.method == "geomedian" and any(s is not None for s in rest):
-        # Weiszfeld weights couple all coordinates; a payload shard would
-        # compute a different (wrong) median than the replicated path.
+    reg_name = "dcq_mad" if cfg.method == "dcq" else cfg.method
+    try:
+        coordinatewise = get_aggregator(reg_name).coordinatewise
+    except KeyError:
+        # match the ValueError contract of aggregate_machine_axis
+        raise ValueError(f"unknown aggregation method {cfg.method!r}") \
+            from None
+    if not coordinatewise and any(s is not None for s in rest):
+        # e.g. geomedian: Weiszfeld weights couple all coordinates; a
+        # payload shard would compute a different (wrong) aggregate than
+        # the replicated path. The registry declares which rules commute
+        # with payload sharding.
         raise ValueError(
-            "geomedian is not coordinate-wise: payload dims must be "
+            f"{cfg.method} is not coordinate-wise: payload dims must be "
             f"replicated in the sharded strategy, got spec {spec}")
 
     def gather_and_reduce(x):

@@ -11,12 +11,13 @@ composed by ``robust_aggregate``. With ``method="mean"``, ``dp_sigma=0``
 and ``attack="none"`` this reduces exactly to data-parallel gradient
 averaging (asserted in tests/test_train.py).
 
-The DCQ path has no oracle scale (unlike the convex protocol, which
-transmits variance estimates), so it uses the MAD-calibrated variant:
-median anchor, 1.4826*MAD scale, composite-quantile correction. On TPU it
-runs through the Pallas bisection kernel (kernels/dcq.py); elsewhere it
-uses the pure-jnp oracle (kernels/dcq_ref.py) — same math, tested to
-agree in tests/test_kernels.py.
+Aggregation dispatches through the ``repro.agg`` registry. The DCQ path
+has no oracle scale (unlike the convex protocol, which transmits variance
+estimates), so it uses the MAD-calibrated ``"dcq_mad"`` variant: median
+anchor, 1.4826*MAD scale, composite-quantile correction. On TPU it runs
+through the batched Pallas bisection kernel (repro/agg/kernel.py);
+elsewhere it uses the pure-jnp reference — same math, tested to agree in
+tests/test_agg.py.
 """
 from __future__ import annotations
 
@@ -26,10 +27,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import agg
 from repro.core import byzantine as byz
-from repro.core import robust_agg
-from repro.kernels.dcq import dcq_pallas
-from repro.kernels.dcq_ref import dcq_mad_reference
 
 # launcher-friendly aliases for the attack names in core/byzantine.py
 _ATTACK_ALIASES = {"sign": "signflip", "noise": "gauss"}
@@ -79,32 +78,33 @@ def corrupt_machines(grads: Any, byz_mask: Optional[jnp.ndarray],
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def _dcq_mad(values: jnp.ndarray, cfg: GradAggConfig) -> jnp.ndarray:
-    """MAD-scaled DCQ of one (m, ...) leaf -> (...). Flattens the payload
-    to (m, p) for the kernels, restores shape/dtype after."""
-    m = values.shape[0]
-    flat = values.reshape(m, -1)
-    use_pallas = (cfg.use_pallas if cfg.use_pallas is not None
-                  else jax.default_backend() == "tpu")
-    if use_pallas:
-        out = dcq_pallas(flat.astype(jnp.float32), K=cfg.K,
-                         interpret=jax.default_backend() != "tpu")
-    else:
-        out = dcq_mad_reference(flat, K=cfg.K)
-    return out.reshape(values.shape[1:]).astype(values.dtype)
+def _backend(cfg: GradAggConfig):
+    """Registry backend for this config: None = auto (Pallas on TPU,
+    reference elsewhere); an explicit ``use_pallas`` pins it."""
+    if cfg.use_pallas is None:
+        return None
+    return "pallas" if cfg.use_pallas else "reference"
 
 
 def aggregate_machine_axis(values: jnp.ndarray,
                            cfg: GradAggConfig) -> jnp.ndarray:
-    """Aggregate one array over its leading machine axis: (m, ...) -> (...)."""
+    """Aggregate one array over its leading machine axis: (m, ...) -> (...).
+
+    Dispatches through the repro.agg registry; ``method="dcq"`` means the
+    MAD-self-calibrated variant (registry name ``"dcq_mad"``) since the
+    training path transmits no variance estimates.
+    """
     if values.ndim < 1 or values.shape[0] < 1:
         raise ValueError(f"need a leading machine axis, got {values.shape}")
-    if cfg.method in ("mean", "median", "trimmed", "geomedian"):
-        return robust_agg.aggregate(values, method=cfg.method,
-                                    trim_beta=cfg.trim_beta, axis=0)
-    if cfg.method == "dcq":
-        return _dcq_mad(values, cfg)
-    raise ValueError(f"unknown aggregation method {cfg.method!r}")
+    method = "dcq_mad" if cfg.method == "dcq" else cfg.method
+    try:
+        out = agg.aggregate(values, method, K=cfg.K,
+                            trim_beta=cfg.trim_beta, axis=0,
+                            backend=_backend(cfg))
+    except KeyError:
+        raise ValueError(f"unknown aggregation method {cfg.method!r}") \
+            from None
+    return out.astype(values.dtype)
 
 
 def robust_aggregate(grads: Any, cfg: GradAggConfig, key: jax.Array,

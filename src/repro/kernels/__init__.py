@@ -1,7 +1,12 @@
-"""Pallas TPU kernels for the two compute hot-spots:
-  dcq         — coordinate-wise DCQ robust aggregation (VPU bisection)
-  gqa_decode  — GQA flash-decode, one token vs long KV cache
-Each has ops.py (platform dispatch) and *_ref.py (pure-jnp oracle).
+"""Pallas TPU kernels.
+
+  gqa_decode  — GQA flash-decode, one token vs long KV cache (ops.py
+                dispatches; gqa_decode_ref.py is the pure-jnp oracle).
+
+The DCQ robust-aggregation kernel moved to ``repro.agg.kernel`` — one
+generalized batched order-statistics kernel (k-th / median / MAD /
+trimmed / DCQ from a shared VPU bisection core). ``kernels/dcq.py`` and
+``kernels/dcq_ref.py`` remain as import shims.
 """
 from repro.kernels import ops
 

@@ -1,118 +1,12 @@
-"""Pallas TPU kernel: coordinate-wise DCQ robust aggregation.
+"""DEPRECATED shim — the DCQ Pallas kernel is now one op of the
+generalized batched order-statistics kernel in ``repro.agg.kernel``
+(shared bisection rank-counting core; leading batch axes on the grid).
 
-The GPU-natural formulation (per-coordinate sort) maps poorly onto the
-TPU's vector unit — there is no fast per-lane sort. Instead we compute
-order statistics by *bisection rank-counting*: binary-search the value
-range per coordinate, counting ranks with full-width VPU comparisons and
-reductions over the machine axis. 60 halvings pin the k-th order statistic
-to below fp32 resolution. The whole tile lives in VMEM:
-
-  values tile (m, TP)  ->  med, MAD scale, K indicator sums  ->  (TP,)
-
-Grid: one program per TP-coordinate tile; the machine axis is small
-(m <= a few thousand) and stays resident. All comparisons are masked-sum
-reductions — no data-dependent control flow, MXU not needed (this is a
-pure VPU kernel, which is why the paper's center-side aggregation is cheap
-on TPU).
-
-Validated in interpret mode against kernels/dcq_ref.py (the pure-jnp
-oracle) over a shape/dtype sweep in tests/test_kernels.py.
+``dcq_pallas`` keeps its historical signature; import
+``repro.agg.ostat_pallas`` for the generalized entry.
 """
 from __future__ import annotations
 
-import functools
-import math
+from repro.agg.kernel import N_BISECT, dcq_pallas  # noqa: F401
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-N_BISECT = 60
-
-
-def _kth_smallest(vals: jnp.ndarray, k: jnp.ndarray, lo: jnp.ndarray,
-                  hi: jnp.ndarray) -> jnp.ndarray:
-    """Bisection k-th order statistic (0-indexed) per column.
-
-    vals: (m, tp) f32; k: scalar int; lo/hi: (tp,) bracketing values.
-    Returns (tp,) the k-th smallest per column (exact as a value present
-    in the column up to fp32 bisection resolution).
-    """
-    def body(_, carry):
-        lo, hi = carry
-        mid = 0.5 * (lo + hi)
-        # rank of mid: how many values are <= mid
-        cnt = jnp.sum((vals <= mid[None, :]).astype(jnp.float32), axis=0)
-        go_right = cnt <= k.astype(jnp.float32)   # need larger values
-        lo = jnp.where(go_right, mid, lo)
-        hi = jnp.where(go_right, hi, mid)
-        return lo, hi
-
-    lo, hi = jax.lax.fori_loop(0, N_BISECT, body, (lo, hi))
-    return hi     # converged upper bracket = smallest value with rank > k
-
-
-def _median_cols(vals: jnp.ndarray) -> jnp.ndarray:
-    """Columnwise median via one or two bisection searches. vals: (m, tp)."""
-    m = vals.shape[0]
-    lo = jnp.min(vals, axis=0)
-    hi = jnp.max(vals, axis=0)
-    if m % 2 == 1:
-        k = jnp.asarray((m - 1) // 2)
-        return _kth_smallest(vals, k, lo, hi)
-    k1 = jnp.asarray(m // 2 - 1)
-    k2 = jnp.asarray(m // 2)
-    a = _kth_smallest(vals, k1, lo, hi)
-    b = _kth_smallest(vals, k2, lo, hi)
-    return 0.5 * (a + b)
-
-
-def _dcq_kernel(values_ref, delta_ref, out_ref, *, K: int, psi_sum: float):
-    vals = values_ref[...].astype(jnp.float32)            # (m, tp)
-    m = vals.shape[0]
-    med = _median_cols(vals)                              # (tp,)
-    mad = _median_cols(jnp.abs(vals - med[None, :]))
-    scale = 1.4826 * mad + 1e-12
-    delta = delta_ref[...]                                # (K, 1) f32
-    # composite-quantile correction: sum_k sum_j [I(v <= med+s*d_k) - kap_k]
-    s = jnp.zeros_like(med)
-    for k in range(K):                                    # K static (10)
-        thr = med + scale * delta[k, 0]
-        kappa = (k + 1.0) / (K + 1.0)
-        ind = (vals <= thr[None, :]).astype(jnp.float32)
-        s = s + ind.sum(axis=0) - m * kappa
-    out_ref[...] = (med - scale * s / (m * psi_sum)).astype(out_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("K", "tile", "interpret"))
-def dcq_pallas(values: jnp.ndarray, K: int = 10, tile: int = 512,
-               interpret: bool = True) -> jnp.ndarray:
-    """DCQ-with-MAD aggregation of (m, p) -> (p,) via the Pallas kernel.
-
-    ``interpret=True`` executes on CPU (this container); on TPU pass
-    interpret=False. p is padded to a tile multiple.
-    """
-    from statistics import NormalDist
-    nd = NormalDist()
-    m, p = values.shape
-    tile = min(tile, p)
-    pad = (-p) % tile
-    if pad:
-        values = jnp.pad(values, ((0, 0), (0, pad)))
-    pp = values.shape[1]
-    knots = [nd.inv_cdf((k + 1.0) / (K + 1.0)) for k in range(K)]
-    delta = jnp.asarray(knots, jnp.float32)[:, None]       # (K, 1)
-    psi_sum = sum(math.exp(-0.5 * d * d) for d in knots) \
-        / math.sqrt(2.0 * math.pi)
-    out = pl.pallas_call(
-        functools.partial(_dcq_kernel, K=K, psi_sum=psi_sum),
-        grid=(pp // tile,),
-        in_specs=[
-            pl.BlockSpec((m, tile), lambda i: (0, i)),
-            pl.BlockSpec((K, 1), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((pp,), values.dtype),
-        interpret=interpret,
-    )(values, delta)
-    return out[:p]
+__all__ = ["dcq_pallas", "N_BISECT"]

@@ -1,30 +1,9 @@
-"""Pure-jnp oracle for the DCQ robust-aggregation kernel.
-
-Implements the MAD-scaled DCQ used by repro.dist.grad_agg (method="dcq"):
-coordinate-wise median over the machine axis, MAD*1.4826 scale,
-composite-quantile correction with K standard-normal knots. grad_agg
-calls this oracle off-TPU and the Pallas kernel (kernels/dcq.py) on TPU;
-the two must agree to fp32 tolerance for every (m, p) shape/dtype in the
-sweep tests (tests/test_kernels.py).
+"""DEPRECATED shim — the pure-jnp MAD-scaled DCQ oracle moved to
+``repro.agg.reference.dcq_mad_reference`` (the registry's reference impl
+for the ``"dcq_mad"`` aggregator).
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-from jax.scipy.special import ndtri
-from jax.scipy.stats import norm
+from repro.agg.reference import dcq_mad_reference  # noqa: F401
 
-
-def dcq_mad_reference(values: jnp.ndarray, K: int = 10) -> jnp.ndarray:
-    """values: (m, p) float; returns (p,) DCQ aggregate with MAD scale."""
-    values = values.astype(jnp.float32)
-    m = values.shape[0]
-    med = jnp.median(values, axis=0)                        # (p,)
-    mad = jnp.median(jnp.abs(values - med[None]), axis=0)
-    scale = 1.4826 * mad + 1e-12
-    kappa = jnp.arange(1, K + 1, dtype=jnp.float32) / (K + 1)
-    delta = ndtri(kappa)                                    # (K,)
-    thr = med[None] + scale[None] * delta[:, None]          # (K, p)
-    ind = (values[None] <= thr[:, None]).astype(jnp.float32)  # (K, m, p)
-    s = (ind - kappa[:, None, None]).sum(axis=(0, 1))       # (p,)
-    denom = m * norm.pdf(delta).sum()
-    return med - scale * s / denom
+__all__ = ["dcq_mad_reference"]

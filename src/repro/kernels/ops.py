@@ -10,8 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dcq as dcq_kernel
-from repro.kernels import dcq_ref, gqa_decode, gqa_decode_ref
+from repro import agg
+from repro.kernels import gqa_decode, gqa_decode_ref
 
 
 def _on_tpu() -> bool:
@@ -20,10 +20,10 @@ def _on_tpu() -> bool:
 
 def dcq_aggregate(values: jnp.ndarray, K: int = 10,
                   prefer: str = "pallas") -> jnp.ndarray:
-    """Robust DCQ aggregation of (m, p) -> (p,) with MAD scale."""
-    if prefer == "jnp":
-        return dcq_ref.dcq_mad_reference(values, K=K)
-    return dcq_kernel.dcq_pallas(values, K=K, interpret=not _on_tpu())
+    """Robust DCQ aggregation of (m, p) -> (p,) with MAD scale; routes
+    through the repro.agg registry ("dcq_mad")."""
+    backend = "reference" if prefer == "jnp" else "pallas"
+    return agg.aggregate(values, "dcq_mad", K=K, backend=backend)
 
 
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

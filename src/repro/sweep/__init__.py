@@ -16,7 +16,7 @@ from repro.sweep.grid import (Scenario, ScenarioGrid, group_label,
 from repro.sweep.presets import (PRESETS, build_preset, fast_variant,
                                  fig_eps_reference, fig_eps_scenarios,
                                  fig_m_scenarios, smoke_scenarios,
-                                 table1_scenarios)
+                                 table1_scenarios, untrusted_scenarios)
 
 __all__ = ["SCHEMA_VERSION", "load", "rows", "save", "to_csv", "validate",
            "SweepExecutor", "run_scenarios",
@@ -24,4 +24,4 @@ __all__ = ["SCHEMA_VERSION", "load", "rows", "save", "to_csv", "validate",
            "scenario_from_json",
            "PRESETS", "build_preset", "fast_variant", "fig_eps_reference",
            "fig_eps_scenarios", "fig_m_scenarios", "smoke_scenarios",
-           "table1_scenarios"]
+           "table1_scenarios", "untrusted_scenarios"]

@@ -1,9 +1,9 @@
 """Versioned sweep artifact: JSON on disk, one record per scenario.
 
-Schema (version 1)::
+Schema (version 2)::
 
     {
-      "schema_version": 1,
+      "schema_version": 2,
       "kind": "repro.sweep",
       "meta": {"jax": ..., "device": ..., "preset": ...},
       "grid": {...} | null,             # originating ScenarioGrid, if any
@@ -15,6 +15,10 @@ Schema (version 1)::
           "spend":    {"eps_total": .., "delta_total": ..,
                        "n_transmissions": .., "eps_per_round": ..,
                        "sigmas": [..]},
+          "comm":     {"bytes_per_machine": .., "bytes_per_round": ..,
+                       "n_transmissions": .., "eps_per_round": ..,
+                       "newton_bytes_per_machine": ..,
+                       "gd20_bytes_per_machine": ..},
           "thetas_qn": [[..p floats..] x reps] | null,
           "timing":   {"group": <label>, "group_seconds": ..,
                        "group_size": .., "traces": ..}
@@ -22,8 +26,13 @@ Schema (version 1)::
       }
     }
 
-Artifacts are written atomically (tmp + rename) after EVERY jit group, so
-an interrupted sweep resumes from the completed scenarios
+v2 added the "comm" record (repro/sweep/comm.py): transmission cost and
+per-round budget ride the same versioned artifact as MRSE. v1 artifacts
+fail validation, so a resume against one restarts cleanly instead of
+mixing schemas.
+
+Artifacts are written atomically (tmp + rename) after EVERY jit-group
+chunk, so an interrupted sweep resumes from the completed scenarios
 (``load_done_ids``). ``to_csv`` flattens the records for plotting.
 """
 from __future__ import annotations
@@ -34,12 +43,14 @@ import os
 import tempfile
 from typing import Dict, Iterable, List, Optional, Set
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 KIND = "repro.sweep"
 
-_REQUIRED_RECORD_KEYS = ("scenario", "metrics", "spend", "timing")
+_REQUIRED_RECORD_KEYS = ("scenario", "metrics", "spend", "comm", "timing")
 _REQUIRED_SPEND_KEYS = ("eps_total", "delta_total", "n_transmissions",
                         "sigmas")
+_REQUIRED_COMM_KEYS = ("bytes_per_machine", "bytes_per_round",
+                       "n_transmissions")
 
 
 def new_artifact(meta: Optional[Dict] = None,
@@ -70,6 +81,9 @@ def validate(artifact: Dict) -> None:
         for key in _REQUIRED_SPEND_KEYS:
             if key not in rec["spend"]:
                 raise ValueError(f"scenario {sid!r} spend missing {key!r}")
+        for key in _REQUIRED_COMM_KEYS:
+            if key not in rec["comm"]:
+                raise ValueError(f"scenario {sid!r} comm missing {key!r}")
 
 
 def save(artifact: Dict, path: str) -> None:
@@ -119,6 +133,8 @@ def rows(artifact: Dict) -> List[Dict]:
         row["eps_total"] = rec["spend"]["eps_total"]
         row["delta_total"] = rec["spend"]["delta_total"]
         row["n_transmissions"] = rec["spend"]["n_transmissions"]
+        row["bytes_per_machine"] = rec["comm"]["bytes_per_machine"]
+        row["bytes_per_round"] = rec["comm"]["bytes_per_round"]
         row["group"] = rec["timing"]["group"]
         row["group_seconds"] = rec["timing"]["group_seconds"]
         out.append(row)

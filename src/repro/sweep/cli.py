@@ -62,6 +62,10 @@ def main(argv=None) -> int:
     ap.add_argument("--sharded", action="store_true",
                     help="shard the machine axis over all visible devices "
                          "(dist/sharded_protocol machine map)")
+    ap.add_argument("--max-batch", type=int, default=None, metavar="N",
+                    help="chunk jit groups larger than N scenarios into "
+                         "bounded batches (caps peak memory; the artifact "
+                         "is written after every chunk)")
     args = ap.parse_args(argv)
 
     scenarios = build_preset(args.preset)
@@ -86,7 +90,8 @@ def main(argv=None) -> int:
         print(f"sharding machine axis over {n_dev} device(s)")
 
     out = args.out or _default_out(args.preset)
-    executor = SweepExecutor(mesh=mesh, progress=print)
+    executor = SweepExecutor(mesh=mesh, progress=print,
+                             chunk_size=args.max_batch)
     t0 = time.time()
     art = executor.run(scenarios, artifact_path=out,
                        resume=not args.no_resume,

@@ -17,6 +17,14 @@ compiles exactly one executable. Passing a ``mesh`` swaps the machine map
 for the shard_map SPMD implementation (dist/sharded_protocol.py) and
 shards every scenario's machine axis over the mesh — the sweep path and
 the multi-device path are the same code.
+
+Oversized jit groups are CHUNKED: with ``chunk_size=c`` a group larger
+than ``c`` runs as ceil(len/c) batches of exactly ``c`` scenario rows
+(the last chunk is padded by repeating its final scenario, so every chunk
+reuses the single compiled executable — the compile-once contract holds),
+bounding peak memory at ``c * reps`` replicates per launch. The artifact
+is written atomically after every chunk, so an interrupted oversized
+group resumes from its completed chunks.
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ import numpy as np
 from repro.core import n_transmissions, protocol_rounds, vmap_machines
 from repro.core.protocol import calibrate_sigma_base
 from repro.sweep import artifact as artifact_mod
+from repro.sweep.comm import comm_record
 from repro.sweep.data import (build_data, byz_mask, compute_metrics,
                               replicate_keys)
 from repro.sweep.grid import Scenario, group_label, group_scenarios
@@ -46,7 +55,8 @@ class SweepExecutor:
     """
 
     def __init__(self, mesh=None,
-                 progress: Optional[Callable[[str], None]] = None):
+                 progress: Optional[Callable[[str], None]] = None,
+                 chunk_size: Optional[int] = None):
         self.mesh = mesh
         if mesh is None:
             self._mmap = vmap_machines
@@ -54,6 +64,9 @@ class SweepExecutor:
             from repro.dist.sharded_protocol import machine_map
             self._mmap = machine_map(mesh, mesh.axis_names[0])
         self.progress = progress or (lambda msg: None)
+        if chunk_size is not None and chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        self.chunk_size = chunk_size
         self.trace_counts: Dict[Tuple, int] = {}
         self._engines: Dict[Tuple, Callable] = {}
         self._data_cache: Dict[Tuple, Tuple] = {}
@@ -158,40 +171,68 @@ class SweepExecutor:
         groups = group_scenarios(pending)
         for gi, (gkey, scens) in enumerate(groups.items()):
             label = group_label(gkey)
+            chunks = self._chunks(scens)
+            tag = (f" in {len(chunks)} chunk(s) of <= {self.chunk_size}"
+                   if len(chunks) > 1 else "")
             self.progress(f"[group {gi + 1}/{len(groups)}] {label}: "
-                          f"{len(scens)} scenario(s) x {scens[0].reps} reps")
+                          f"{len(scens)} scenario(s) x {scens[0].reps} reps"
+                          f"{tag}")
             engine = self._engine(scens[0])
-            inputs, auxes = self._batch_inputs(scens)
-            t0 = time.perf_counter()
-            arrs = engine(*inputs)
-            jax.block_until_ready(arrs.theta_qn)
-            dt = time.perf_counter() - t0
-            for i, (s, aux) in enumerate(zip(scens, auxes)):
-                thetas = {"cq": arrs.theta_cq[i], "os": arrs.theta_os[i],
-                          "qn": arrs.theta_qn[i]}
-                record = {
-                    "scenario": s.to_json(),
-                    "metrics": compute_metrics(s, thetas, aux),
-                    "spend": _spend_record(s, np.asarray(arrs.sigmas[i, 0])),
-                    "thetas_qn": (np.asarray(arrs.theta_qn[i], np.float64)
-                                  .tolist() if store_thetas else None),
-                    "timing": {"group": label, "group_seconds": dt,
-                               "group_size": len(scens),
-                               "traces": self.trace_counts[gkey]},
-                }
-                art["scenarios"][s.scenario_id()] = record
-            if artifact_path:
-                artifact_mod.save(art, artifact_path)
+            for ci, chunk in enumerate(chunks):
+                # pad split chunks to the fixed chunk_size by repeating the
+                # last scenario: every chunk reuses the ONE compiled
+                # executable (padded rows are dropped below).
+                n_real = len(chunk)
+                padded = chunk
+                if len(chunks) > 1 and n_real < self.chunk_size:
+                    padded = chunk + [chunk[-1]] * (self.chunk_size - n_real)
+                inputs, auxes = self._batch_inputs(padded)
+                t0 = time.perf_counter()
+                arrs = engine(*inputs)
+                jax.block_until_ready(arrs.theta_qn)
+                dt = time.perf_counter() - t0
+                for i, (s, aux) in enumerate(zip(chunk, auxes[:n_real])):
+                    thetas = {"cq": arrs.theta_cq[i],
+                              "os": arrs.theta_os[i],
+                              "qn": arrs.theta_qn[i]}
+                    record = {
+                        "scenario": s.to_json(),
+                        "metrics": compute_metrics(s, thetas, aux),
+                        "spend": _spend_record(
+                            s, np.asarray(arrs.sigmas[i, 0])),
+                        "comm": comm_record(s.p, s.protocol_config()),
+                        "thetas_qn": (np.asarray(arrs.theta_qn[i],
+                                                 np.float64).tolist()
+                                      if store_thetas else None),
+                        "timing": {"group": label, "group_seconds": dt,
+                                   "group_size": n_real,
+                                   "chunk": ci, "n_chunks": len(chunks),
+                                   "traces": self.trace_counts[gkey]},
+                    }
+                    art["scenarios"][s.scenario_id()] = record
+                if artifact_path:
+                    # per-chunk atomic write: an interrupted oversized
+                    # group resumes from its completed chunks
+                    artifact_mod.save(art, artifact_path)
         artifact_mod.validate(art)
         return art
+
+    def _chunks(self, scens: List[Scenario]) -> List[List[Scenario]]:
+        """Split one jit group into bounded scenario batches."""
+        c = self.chunk_size
+        if c is None or len(scens) <= c:
+            return [scens]
+        return [scens[i:i + c] for i in range(0, len(scens), c)]
 
 
 def run_scenarios(scenarios: Iterable[Scenario], mesh=None,
                   artifact_path: Optional[str] = None, resume: bool = True,
                   store_thetas: bool = True, meta: Optional[Dict] = None,
-                  progress: Optional[Callable[[str], None]] = None) -> Dict:
+                  progress: Optional[Callable[[str], None]] = None,
+                  chunk_size: Optional[int] = None) -> Dict:
     """One-shot convenience wrapper around :class:`SweepExecutor`."""
-    executor = SweepExecutor(mesh=mesh, progress=progress)
+    executor = SweepExecutor(mesh=mesh, progress=progress,
+                             chunk_size=chunk_size)
     return executor.run(scenarios, artifact_path=artifact_path,
                         resume=resume, store_thetas=store_thetas, meta=meta)
 

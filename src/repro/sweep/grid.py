@@ -20,6 +20,7 @@ import hashlib
 import itertools
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.agg import registered as registered_aggregators
 from repro.configs.base import ProtocolConfig
 
 
@@ -69,6 +70,13 @@ class Scenario:
                 f"reps={self.reps}")
         if self.dataset == "digits" and self.pair is None:
             raise ValueError("digits scenarios need a class `pair`")
+        if self.aggregator not in registered_aggregators():
+            # the repro.agg registry is the source of truth: a newly
+            # registered aggregator is immediately sweepable, a typo is
+            # rejected before any compilation happens
+            raise ValueError(
+                f"unknown aggregator {self.aggregator!r}; registered: "
+                f"{registered_aggregators()}")
 
     # ------------------------------------------------------------- identity
 

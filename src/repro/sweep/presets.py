@@ -4,17 +4,21 @@ Builders are parameterized so the figure benchmarks stay thin wrappers
 (they reproduce their pre-refactor PRNG key schedules exactly via
 ``rep_seeds``); the CLI exposes them through ``PRESETS``:
 
-  smoke    2 losses x 2 attacks x 2 aggregators x 2 eps — CI gate, <5 min CPU
-  fig-eps  Figures 1/2/4/5: MRSE vs eps, normal + 10% Byzantine
-  fig-m    Figures 3/6:     MRSE vs machine count m
-  table1   Table 1 stand-in: digit-pair accuracy vs eps (+ Byzantine)
-  paper    everything above except smoke, in one artifact
+  smoke      2 losses x 2 attacks x 2 aggregators x 2 eps — CI gate, <5 min CPU
+  fig-eps    Figures 1/2/4/5: MRSE vs eps, normal + 10% Byzantine
+  fig-m      Figures 3/6:     MRSE vs machine count m
+  table1     Table 1 stand-in: digit-pair accuracy vs eps (+ Byzantine)
+  untrusted  §4.3 sensitivity: center_trust x EVERY registered aggregator
+             (the grid is driven by the repro.agg registry — a newly
+             registered aggregator appears in this preset automatically)
+  paper      everything above except smoke/untrusted, in one artifact
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Tuple
 
+from repro.agg import registered as registered_aggregators
 from repro.sweep.grid import Scenario, ScenarioGrid
 
 #: Figure 1-3 default privacy budgets (paper §5.1)
@@ -81,6 +85,29 @@ def fig_m_scenarios(problem: str = "logistic", n: int = 500, p: int = 10,
         for m in m_grid]
 
 
+# ------------------------------------------------ untrusted center (§4.3)
+
+def untrusted_scenarios(eps_grid: Tuple[float, ...] = (10.0, 30.0),
+                        m: int = 10, n: int = 400, p: int = 5,
+                        reps: int = 3, byz_frac: float = 0.1
+                        ) -> List[Scenario]:
+    """Center-trust x aggregator grid over every registered aggregator.
+
+    The aggregator axis is read from the repro.agg registry, so
+    ``register(...)``-ing a new rule makes it sweepable here with no
+    preset change. eps and the Byzantine fraction ride the vmap axis;
+    each (aggregator, trust) pair is one jit group."""
+    grid = ScenarioGrid(
+        problems=("logistic",),
+        attacks=("scale",),
+        aggregators=registered_aggregators(),
+        eps_grid=eps_grid,
+        m_grid=(m,), byz_fracs=(0.0, byz_frac),
+        center_trusts=("trusted", "untrusted"),
+        n=n, p=p, reps=reps)
+    return grid.expand()
+
+
 # --------------------------------------------------------- Table 1 (digits)
 
 def table1_scenarios(pair: Tuple[int, int], n_features: int,
@@ -130,6 +157,10 @@ def _build_table1() -> List[Scenario]:
     return out
 
 
+def _build_untrusted() -> List[Scenario]:
+    return untrusted_scenarios()
+
+
 def _build_paper() -> List[Scenario]:
     return _build_fig_eps() + _build_fig_m() + _build_table1()
 
@@ -139,6 +170,7 @@ PRESETS = {
     "fig-eps": _build_fig_eps,
     "fig-m": _build_fig_m,
     "table1": _build_table1,
+    "untrusted": _build_untrusted,
     "paper": _build_paper,
 }
 

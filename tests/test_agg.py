@@ -1,0 +1,230 @@
+"""repro.agg subsystem: registry contracts, Pallas-vs-reference agreement
+for EVERY registered aggregator (shape/dtype/m-parity sweep, batched grid
+path, fused pass), and dispatch semantics. The hypothesis property suite
+lives in tests/test_agg_properties.py (importorskip-gated)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import agg
+from repro.agg import (Aggregator, aggregate, aggregate_batched,
+                       get_aggregator, median_deviation_variance,
+                       median_mad_dcq, ostat_pallas, register, registered)
+
+#: registered aggregators that have a Pallas kernel form
+PALLAS_AGGS = tuple(n for n in registered() if agg.has_pallas(n))
+
+
+def _scale_for(method, shape, seed=7):
+    if get_aggregator(method).needs_scale:
+        return jnp.abs(jax.random.normal(jax.random.PRNGKey(seed),
+                                         shape)) + 0.1
+    return None
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_contents():
+    names = registered()
+    for expected in ("mean", "median", "trimmed", "geomedian", "dcq",
+                     "dcq_mad"):
+        assert expected in names
+    assert get_aggregator("dcq").needs_scale
+    assert not get_aggregator("geomedian").coordinatewise
+    assert get_aggregator("geomedian").pallas is None
+    assert get_aggregator("geomedian").batching == "vmap"
+    with pytest.raises(KeyError, match="unknown aggregator"):
+        get_aggregator("nope")
+
+
+def test_register_new_aggregator_is_dispatchable_and_sweepable():
+    """Adding an aggregator is one registry entry: immediately usable from
+    aggregate() and accepted by the sweep's Scenario validation."""
+    register(Aggregator(
+        name="_test_midrange",
+        reference=lambda values, *, scale=None, K=10, trim_beta=0.2, axis=0:
+            0.5 * (values.min(axis=axis) + values.max(axis=axis))))
+    try:
+        v = jnp.asarray([[1.0, 4.0], [3.0, 0.0], [2.0, 2.0]])
+        out = aggregate(v, "_test_midrange")
+        np.testing.assert_allclose(np.asarray(out), [2.0, 2.0])
+        from repro.sweep import Scenario
+        s = Scenario(m=4, n=50, p=3, aggregator="_test_midrange")
+        assert s.aggregator == "_test_midrange"
+    finally:
+        from repro.agg.registry import _REGISTRY
+        _REGISTRY.pop("_test_midrange")
+
+
+def test_scenario_rejects_unregistered_aggregator():
+    from repro.sweep import Scenario
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        Scenario(m=4, n=50, p=3, aggregator="typo")
+
+
+# ------------------------------------- Pallas vs reference: exhaustive sweep
+
+@pytest.mark.parametrize("method", PALLAS_AGGS)
+@pytest.mark.parametrize("m", [5, 8, 16, 33])   # odd/even m-parity included
+@pytest.mark.parametrize("p", [16, 100, 513])
+def test_pallas_matches_reference_shape_sweep(method, m, p):
+    v = jax.random.normal(jax.random.PRNGKey(m * 1000 + p), (m, p)) * 2.5
+    scale = _scale_for(method, (p,))
+    ref = aggregate(v, method, scale=scale, backend="reference")
+    pal = aggregate(v, method, scale=scale, backend="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               atol=5e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("method", PALLAS_AGGS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_matches_reference_dtypes(method, dtype):
+    v = (jax.random.normal(jax.random.PRNGKey(0), (17, 64)) * 3).astype(dtype)
+    scale = _scale_for(method, (64,))
+    out = aggregate(v, method, scale=scale, backend="pallas")
+    ref = aggregate(v.astype(jnp.float32), method, scale=scale,
+                    backend="reference")
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=0.05, rtol=0.05)
+
+
+@pytest.mark.parametrize("method", PALLAS_AGGS)
+@pytest.mark.parametrize("batch", [(3,), (2, 4)])
+def test_pallas_batched_grid_path(method, batch):
+    """Leading batch axes map onto the Pallas grid: one fused launch must
+    agree with the reference batched via native axis=-2 reductions."""
+    v = jax.random.normal(jax.random.PRNGKey(11), batch + (9, 37)) * 2.0
+    scale = _scale_for(method, batch + (37,))
+    ref = aggregate_batched(v, method, scale=scale, backend="reference")
+    pal = aggregate_batched(v, method, scale=scale, backend="pallas")
+    assert pal.shape == batch + (37,)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_batched_matches_per_slice_loop():
+    """The batched grid path equals the per-slice (per-scenario) calls it
+    replaces."""
+    v = jax.random.normal(jax.random.PRNGKey(3), (5, 12, 33))
+    pal = aggregate_batched(v, "dcq_mad", backend="pallas")
+    for b in range(5):
+        one = aggregate(v[b], "dcq_mad", backend="pallas")
+        np.testing.assert_allclose(np.asarray(pal[b]), np.asarray(one),
+                                   atol=1e-5)
+
+
+def test_geomedian_batched_vmap_rule():
+    v = jax.random.normal(jax.random.PRNGKey(5), (4, 11, 6))
+    out = aggregate_batched(v, "geomedian")
+    for b in range(4):
+        np.testing.assert_allclose(
+            np.asarray(out[b]), np.asarray(aggregate(v[b], "geomedian")),
+            atol=1e-5)
+
+
+# ------------------------------------------------------ fused single pass
+
+def test_fused_median_mad_dcq_matches_separate():
+    v = jax.random.normal(jax.random.PRNGKey(9), (2, 15, 40)) * 4.0
+    for backend in ("reference", "pallas"):
+        med, mad, d = median_mad_dcq(v, backend=backend)
+        np.testing.assert_allclose(
+            np.asarray(med),
+            np.asarray(aggregate_batched(v, "median", backend="reference")),
+            atol=5e-5)
+        np.testing.assert_allclose(
+            np.asarray(d),
+            np.asarray(aggregate_batched(v, "dcq_mad",
+                                         backend="reference")),
+            atol=5e-5, rtol=1e-4)
+        # raw MAD: median absolute deviation around the median
+        ref_mad = jnp.median(
+            jnp.abs(v - jnp.median(v, axis=-2, keepdims=True)), axis=-2)
+        np.testing.assert_allclose(np.asarray(mad), np.asarray(ref_mad),
+                                   atol=5e-5)
+
+
+def test_median_deviation_variance_matches_inline_formula():
+    """The named helper reproduces the untrusted-center plug-in that was
+    previously inlined six ways in core/protocol.py."""
+    v = jax.random.normal(jax.random.PRNGKey(2), (21, 8))
+    n = 400
+    expect = jnp.maximum(
+        jnp.median((v - jnp.median(v, 0)) ** 2, 0) * n, 1e-12)
+    np.testing.assert_array_equal(
+        np.asarray(median_deviation_variance(v, n)), np.asarray(expect))
+
+
+# ------------------------------------------------------- dispatch semantics
+
+def test_aggregate_needs_scale_errors():
+    v = jnp.ones((5, 3))
+    with pytest.raises(ValueError, match="scale"):
+        aggregate(v, "dcq")
+    with pytest.raises(ValueError, match="scale"):
+        aggregate_batched(v[None], "dcq")
+
+
+def test_aggregate_axis_argument():
+    v = jax.random.normal(jax.random.PRNGKey(4), (3, 101, 2))
+    a = aggregate(jnp.moveaxis(v, 1, 0), "median")
+    b = aggregate(v, "median", axis=1)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_aggregate_scalar_machine_axis():
+    """1-D input (m,) -> scalar, both backends (protocol's s1 median)."""
+    v = jnp.asarray([3.0, 1.0, 2.0, 5.0, 4.0])
+    for backend in ("reference", "pallas"):
+        out = aggregate(v, "median", backend=backend)
+        assert out.shape == ()
+        np.testing.assert_allclose(float(out), 3.0, atol=1e-5)
+
+
+def test_trimmed_too_large_raises_both_backends():
+    v = jnp.ones((4, 3))
+    for backend in ("reference", "pallas"):
+        with pytest.raises(ValueError, match="too large"):
+            aggregate(v, "trimmed", trim_beta=1.0, backend=backend)
+
+
+def test_ostat_kth_statistic():
+    v = jax.random.normal(jax.random.PRNGKey(8), (2, 19, 24))
+    srt = jnp.sort(v, axis=-2)
+    for k in (0, 7, 18):
+        out = ostat_pallas(v, "kth", kth=k)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(srt[:, k]),
+                                   atol=5e-5)
+
+
+def test_deprecation_shims_still_serve_pinned_imports():
+    from repro.core.dcq import dcq as dcq_shim
+    from repro.core.robust_agg import aggregate as agg_shim
+    from repro.kernels.dcq import dcq_pallas as pallas_shim
+    from repro.kernels.dcq_ref import dcq_mad_reference as ref_shim
+    v = jax.random.normal(jax.random.PRNGKey(1), (9, 16))
+    np.testing.assert_allclose(
+        np.asarray(agg_shim(v, method="median")),
+        np.asarray(jnp.median(v, axis=0)))
+    np.testing.assert_allclose(
+        np.asarray(dcq_shim(v, jnp.ones((16,)))),
+        np.asarray(agg.dcq(v, jnp.ones((16,)))))
+    np.testing.assert_allclose(np.asarray(pallas_shim(v, tile=16)),
+                               np.asarray(ref_shim(v)), atol=5e-5)
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        agg_shim(v, method="nope")
+
+
+def test_byzantine_resistance_kernel():
+    """A minority of wild rows must not move the kernel aggregates much."""
+    key = jax.random.PRNGKey(1)
+    v = jax.random.normal(key, (40, 32)) + 2.0
+    v_bad = v.at[:4].multiply(-30.0)
+    for method in ("median", "trimmed", "dcq_mad"):
+        clean = aggregate(v, method, backend="pallas")
+        atk = aggregate(v_bad, method, backend="pallas")
+        assert float(jnp.abs(atk - clean).max()) < 0.6, method
+    assert float(jnp.abs(v_bad.mean(0) - v.mean(0)).max()) > 1.0

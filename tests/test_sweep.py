@@ -172,6 +172,90 @@ def test_untrusted_center_scenarios_run():
     for rec in art["scenarios"].values():
         assert rec["spend"]["n_transmissions"] == 6
         assert len(rec["spend"]["sigmas"]) == 6
+        # untrusted mode transmits SIX p-vectors; the comm record tracks it
+        assert rec["comm"]["n_transmissions"] == 6
+        assert rec["comm"]["bytes_per_machine"] == 4 * 6 * P
+
+
+def test_untrusted_preset_driven_by_registry():
+    """The untrusted preset sweeps center_trust x EVERY registered
+    aggregator — a new registry entry appears in the grid automatically."""
+    from repro.agg import registered
+    from repro.sweep import untrusted_scenarios
+    scens = untrusted_scenarios()
+    assert {s.aggregator for s in scens} == set(registered())
+    assert {s.center_trust for s in scens} == {"trusted", "untrusted"}
+    groups = group_scenarios(scens)
+    assert len(groups) == 2 * len(registered())   # one per (agg, trust)
+
+
+# --------------------------------------------------------------- chunking
+
+def test_chunked_group_matches_unchunked(two_eps_artifact):
+    """chunk_size bounds replicates-per-launch; per-key results match the
+    one-batch path (up to compiled-batch-shape fp reassociation) and the
+    group still compiles exactly once (padded final chunk)."""
+    _, scens, art = two_eps_artifact
+    chunked = SweepExecutor(chunk_size=1)
+    art_c = chunked.run(scens)
+    (gkey,) = {s.group_key() for s in scens}
+    assert chunked.trace_counts[gkey] == 1
+    for s in scens:
+        a = np.asarray(art["scenarios"][s.scenario_id()]["thetas_qn"])
+        b = np.asarray(art_c["scenarios"][s.scenario_id()]["thetas_qn"])
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+        t = art_c["scenarios"][s.scenario_id()]["timing"]
+        assert t["n_chunks"] == 2 and t["group_size"] == 1
+
+
+def test_chunked_writes_artifact_per_chunk(tmp_path, monkeypatch):
+    """The artifact lands on disk after EVERY chunk (resumable mid-group),
+    each snapshot schema-valid."""
+    path = str(tmp_path / "chunked.json")
+    saves = []
+    real_save = artifact_mod.save
+
+    def counting_save(art, p):
+        real_save(art, p)
+        saves.append(len(art["scenarios"]))
+    monkeypatch.setattr(artifact_mod, "save", counting_save)
+    scens = [tiny(eps=float(e), rep_seeds=(e, e + 1)) for e in (10, 20, 30)]
+    SweepExecutor(chunk_size=2).run(scens, artifact_path=path)
+    assert saves == [2, 3]          # chunk 1 (2 scens), chunk 2 (1 scen)
+    artifact_mod.validate(artifact_mod.load(path))
+
+
+def test_chunk_size_validation():
+    with pytest.raises(ValueError, match="chunk_size"):
+        SweepExecutor(chunk_size=0)
+
+
+# ------------------------------------------------------------ comm record
+
+def test_comm_record_rides_artifact(two_eps_artifact):
+    """Schema v2: transmission cost rides the same record as MRSE."""
+    _, scens, art = two_eps_artifact
+    for s in scens:
+        comm = art["scenarios"][s.scenario_id()]["comm"]
+        assert comm["bytes_per_round"] == 4 * P
+        assert comm["bytes_per_machine"] == 4 * 5 * P
+        assert comm["n_transmissions"] == 5
+        assert comm["eps_per_round"] == pytest.approx(s.eps / 5)
+        # the paper's budget argument: Newton's Hessian round dwarfs qN
+        assert comm["newton_bytes_per_machine"] > comm["bytes_per_machine"]
+
+
+def test_artifact_v2_rejects_missing_comm(two_eps_artifact):
+    _, _, art = two_eps_artifact
+    import json as _json
+    bad = _json.loads(_json.dumps(art))
+    next(iter(bad["scenarios"].values())).pop("comm")
+    with pytest.raises(ValueError, match="missing 'comm'"):
+        artifact_mod.validate(bad)
+    assert art["schema_version"] == 2
+    # flat rows expose the byte columns for plotting
+    row = artifact_mod.rows(art)[0]
+    assert "bytes_per_machine" in row and "bytes_per_round" in row
 
 
 # --------------------------------------------------------------- artifact
