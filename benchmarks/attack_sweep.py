@@ -1,0 +1,88 @@
+"""Attack-sensitivity sweep benchmark: wall-clock + compile counts for the
+registry-driven threat-model grid (``--preset attack-sensitivity``).
+
+    PYTHONPATH=src python -m benchmarks.attack_sweep --fast
+
+Runs the preset twice through ONE executor: the first pass pays every
+(attack, aggregator) jit-group compile, the second reuses the cached
+executables — its wall-clock is the steady-state number a nightly re-run
+should see. Writes a ``BENCH_protocol.json``-style record to
+``BENCH_attacks.json``:
+
+  * ``sweep_first_s`` / ``sweep_steady_s`` — cold vs steady wall-clock;
+  * ``speedup_steady``  — first/steady, the in-run compile-amortization
+    signal measured on the SAME machine (hardware cancels out, so
+    benchmarks/check_regression.py can two-signal gate it against the
+    committed benchmarks/baselines/BENCH_attacks_fast.json);
+  * ``n_groups`` / ``n_traces`` — the compile-once contract: ``ok`` is
+    false unless every jit group traced exactly once across BOTH passes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.sweep.executor import SweepExecutor
+from repro.sweep.grid import group_scenarios
+from repro.sweep.presets import attack_sensitivity_scenarios, fast_variant
+
+
+def bench_attack_sweep(fast: bool = False,
+                       out_path: str = "BENCH_attacks.json") -> dict:
+    scens = attack_sensitivity_scenarios()
+    if fast:
+        scens = fast_variant(scens)
+    groups = group_scenarios(scens)
+    s0 = scens[0]
+    print(f"attack-sensitivity{' --fast' if fast else ''}: "
+          f"{len(scens)} scenarios in {len(groups)} jit group(s)")
+
+    executor = SweepExecutor()
+    t0 = time.perf_counter()
+    executor.run(scens, store_thetas=False)
+    first_s = time.perf_counter() - t0
+    traces_cold = sum(executor.trace_counts.values())
+
+    t0 = time.perf_counter()
+    executor.run(scens, store_thetas=False)
+    steady_s = time.perf_counter() - t0
+    traces = sum(executor.trace_counts.values())
+
+    ok = traces_cold == len(groups) and traces == len(groups)
+    record = {
+        "setting": {
+            "preset": "attack-sensitivity", "fast": fast,
+            "n_scenarios": len(scens), "n_groups": len(groups),
+            "m": s0.m, "n": s0.n, "p": s0.p, "reps": s0.reps,
+            "device": jax.devices()[0].platform, "jax": jax.__version__,
+        },
+        "sweep_first_s": first_s,
+        "sweep_steady_s": steady_s,
+        "speedup_steady": first_s / steady_s,
+        "n_traces": traces,
+        "ok": ok,
+    }
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"cold {first_s:.1f}s -> steady {steady_s:.1f}s "
+          f"({record['speedup_steady']:.1f}x); {traces} trace(s) over "
+          f"{len(groups)} group(s); ok={ok}")
+    print(f"wrote {out_path}")
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced replicate counts (the nightly-CI scale)")
+    ap.add_argument("--out", default="BENCH_attacks.json")
+    args = ap.parse_args(argv)
+    record = bench_attack_sweep(fast=args.fast, out_path=args.out)
+    return 0 if record["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

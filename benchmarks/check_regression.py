@@ -1,12 +1,14 @@
 """Benchmark regression gates: compare fresh BENCH_protocol.json /
-BENCH_agg.json records against the committed baselines and fail on a
-steady-state slowdown of a compiled hot path.
+BENCH_agg.json / BENCH_attacks.json records against the committed
+baselines and fail on a steady-state slowdown of a compiled hot path.
 
     python -m benchmarks.check_regression \
         --fresh BENCH_protocol.json \
         --baseline benchmarks/baselines/BENCH_protocol_fast.json \
         --fresh-agg BENCH_agg.json \
-        --baseline-agg benchmarks/baselines/BENCH_agg_fast.json
+        --baseline-agg benchmarks/baselines/BENCH_agg_fast.json \
+        --fresh-attacks BENCH_attacks.json \
+        --baseline-attacks benchmarks/baselines/BENCH_attacks_fast.json
 
 A real engine regression (lost jit cache, accidental host sync, eager
 fallback, a de-batched aggregation path) degrades BOTH signals below; a
@@ -104,6 +106,27 @@ def compare_agg(fresh: dict, baseline: dict, factor: float = 2.0) -> list:
                   "BENCH_agg_fast.json (then git checkout BENCH_agg.json)")
 
 
+def compare_attacks(fresh: dict, baseline: dict,
+                    factor: float = 2.0) -> list:
+    """Gate for the attack-sensitivity sweep record (BENCH_attacks.json,
+    benchmarks/attack_sweep.py): steady-state sweep wall time and its
+    same-machine compile-amortization ratio; ``ok=false`` (a jit group
+    traced more than once across the two passes) fails outright."""
+    return _two_signal_gate(
+        fresh, baseline, factor,
+        setting_keys=("preset", "fast", "n_scenarios", "n_groups",
+                      "m", "n", "p", "reps"),
+        wall_key="sweep_steady_s", speedup_key="speedup_steady",
+        label="attack sweep",
+        speedup_label="cold->steady compile amortization",
+        ok_msg="a jit group retraced: one trace per (attack, aggregator) "
+               "violated",
+        regen_cmd="python -m benchmarks.attack_sweep --fast && "
+                  "cp BENCH_attacks.json benchmarks/baselines/"
+                  "BENCH_attacks_fast.json (then git checkout "
+                  "BENCH_attacks.json)")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", default="BENCH_protocol.json")
@@ -113,6 +136,11 @@ def main(argv=None) -> int:
                     help="fresh BENCH_agg.json (omit to skip the agg gate)")
     ap.add_argument("--baseline-agg",
                     default="benchmarks/baselines/BENCH_agg_fast.json")
+    ap.add_argument("--fresh-attacks", default=None,
+                    help="fresh BENCH_attacks.json (omit to skip the "
+                         "attack-sweep gate)")
+    ap.add_argument("--baseline-attacks",
+                    default="benchmarks/baselines/BENCH_attacks_fast.json")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max tolerated slowdown (default 2x)")
     args = ap.parse_args(argv)
@@ -128,6 +156,13 @@ def main(argv=None) -> int:
             baseline_agg = json.load(f)
         failures += compare_agg(fresh_agg, baseline_agg,
                                 factor=args.factor)
+    if args.fresh_attacks:
+        with open(args.fresh_attacks) as f:
+            fresh_attacks = json.load(f)
+        with open(args.baseline_attacks) as f:
+            baseline_attacks = json.load(f)
+        failures += compare_attacks(fresh_attacks, baseline_attacks,
+                                    factor=args.factor)
     for msg in failures:
         print(f"REGRESSION: {msg}", file=sys.stderr)
     print("PASS" if not failures else "FAIL")

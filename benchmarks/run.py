@@ -34,13 +34,15 @@ def main(argv=None):
     ap.add_argument("--out", default="experiments/bench_results.json")
     args = ap.parse_args(argv)
 
-    from benchmarks import (are_dcq, bench_protocol, comm_cost, kernel_bench,
-                            mrse_vs_eps, mrse_vs_m, roofline_report,
-                            table1_digits)
+    from benchmarks import (are_dcq, attack_sweep, bench_protocol,
+                            comm_cost, kernel_bench, mrse_vs_eps,
+                            mrse_vs_m, roofline_report, table1_digits)
     suites = [
         ("are_dcq (paper §1.2: ARE 0.955 vs 0.637)", are_dcq.main),
         ("bench_protocol (eager vs compiled engine)", bench_protocol.main),
         ("sweep_smoke (scenario-sweep engine grid)", _sweep_smoke),
+        ("attack_sweep (threat-model sensitivity grid)",
+         lambda fast=False: attack_sweep.bench_attack_sweep(fast=fast)),
         ("mrse_vs_eps (Figures 1/2/4/5)", mrse_vs_eps.main),
         ("mrse_vs_m (Figures 3/6)", mrse_vs_m.main),
         ("table1_digits (Table 1 stand-in)", table1_digits.main),

@@ -1,0 +1,169 @@
+"""``repro.attacks`` — the registry-backed threat-model subsystem.
+
+Every Byzantine corruption in this repo routes through here: the paper's
+Algorithm 1 rounds (core/protocol.py — and therefore the shard_map SPMD
+path), the comparison baselines (core/baselines.py), the gradient
+aggregation pipeline (dist/grad_agg.py), the sweep engine
+(``Scenario.attack`` validates against this registry) and the training
+launcher. The design mirrors ``repro.agg``: adding an attack is one
+registry entry that is immediately dispatchable, sweepable
+(``python -m repro.sweep --preset attack-sensitivity`` expands every
+registered attack over its declared factor grid) and benchmarkable
+(``benchmarks/attack_sweep.py``).
+
+Dispatch contract (``apply_attack``): the rule produces replacement rows
+for the whole ``(m, ...)`` stack; ``jnp.where(mask, bad, values)`` puts
+them only on the Byzantine rows, so honest transmissions are bit-identical
+no matter the attack. Omniscient rules (ALIE, IPM) read honest-machine
+statistics from ``(values, mask)`` — corruption is applied at the point
+where the full machine axis is visible, exactly what a coordinating
+adversary observes. ``attack="none"`` is an exact no-op (the input object
+is returned untouched).
+
+Migration note: ``core/byzantine.py`` is now a thin import shim over this
+package; import from ``repro.attacks`` directly in new code.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.attacks import registry, rules
+from repro.attacks.registry import (ALIASES, Attack, get_attack, needs_key,
+                                    register, registered, resolve,
+                                    unregister)
+from repro.attacks.rules import (N_PROTOCOL_ROUNDS, adaptive_scale_attack,
+                                 alie_attack, byzantine_mask,
+                                 gaussian_attack, honest_mean_std,
+                                 ipm_attack, random_value_attack,
+                                 scaling_attack, sign_flip_attack,
+                                 zero_attack)
+
+__all__ = [
+    "Attack", "register", "unregister", "get_attack", "registered",
+    "resolve", "needs_key", "ALIASES",
+    "apply_attack", "byzantine_mask", "honest_mean_std",
+    "N_PROTOCOL_ROUNDS",
+    "scaling_attack", "sign_flip_attack", "gaussian_attack",
+    "random_value_attack", "zero_attack", "adaptive_scale_attack",
+    "alie_attack", "ipm_attack",
+    "registry", "rules",
+]
+
+
+# ------------------------------------------------------- built-in attacks
+#
+# corrupt signature: (values, mask, factor, key) -> replacement rows
+# (round-aware rules take an extra ``round_idx`` keyword). Factors may be
+# traced scalars — the sweep executor batches them along a vmap axis.
+
+register(Attack(
+    name="none",
+    corrupt=lambda values, mask, factor, key: values,
+    factor_grid=(),
+    doc="no corruption (the honest-execution control)"))
+
+register(Attack(
+    name="scale",
+    corrupt=lambda values, mask, factor, key:
+        rules.scaling_attack(values, factor),
+    factor_grid=(-10.0, -3.0, 3.0, 10.0),
+    doc="transmit factor x the true statistic (paper §5.1: -3/+3)"))
+
+register(Attack(
+    name="signflip",
+    corrupt=lambda values, mask, factor, key:
+        rules.sign_flip_attack(values),
+    factor_grid=(1.0,),
+    doc="transmit the negated statistic (factor ignored)"))
+
+register(Attack(
+    name="gauss",
+    corrupt=lambda values, mask, factor, key:
+        rules.gaussian_attack(values, key, sigma=abs(factor)),
+    needs_key=True,
+    factor_grid=(3.0, 10.0, 30.0),
+    doc="additive N(0, sigma^2) noise with sigma = |factor|"))
+
+register(Attack(
+    name="random",
+    corrupt=lambda values, mask, factor, key:
+        rules.random_value_attack(values, key, scale=abs(factor)),
+    needs_key=True,
+    factor_grid=(3.0, 10.0, 30.0),
+    doc="replace with |factor| x N(0, 1) garbage"))
+
+register(Attack(
+    name="zero",
+    corrupt=lambda values, mask, factor, key:
+        rules.zero_attack(values),
+    factor_grid=(1.0,),
+    doc="transmit zeros: silent drop-out / free-rider (factor ignored)"))
+
+register(Attack(
+    name="adaptive_scale",
+    corrupt=lambda values, mask, factor, key, round_idx=0:
+        rules.adaptive_scale_attack(values, factor, round_idx=round_idx),
+    round_aware=True,
+    factor_grid=(-10.0, -3.0, 3.0),
+    doc="scaling ramping 1x -> factor x over Algorithm 1's rounds "
+        "(evades early-round detectors)"))
+
+register(Attack(
+    name="alie",
+    corrupt=lambda values, mask, factor, key:
+        rules.alie_attack(values, mask, z=factor),
+    omniscient=True,
+    factor_grid=(0.5, 1.0, 2.0),
+    doc="'a little is enough' (Baruch et al. 2019): honest_mean - "
+        "factor x honest_std, hidden inside the honest spread"))
+
+register(Attack(
+    name="ipm",
+    corrupt=lambda values, mask, factor, key:
+        rules.ipm_attack(values, mask, eps=factor),
+    omniscient=True,
+    factor_grid=(0.5, 1.5, 10.0),
+    doc="inner-product manipulation (Xie et al. 2020): -factor x "
+        "honest_mean, reversing the aggregate's descent direction"))
+
+
+# ------------------------------------------------------------ dispatch API
+
+def apply_attack(values: jnp.ndarray, mask: jnp.ndarray,
+                 attack: str = "scale", factor=-3.0,
+                 key: Optional[jax.Array] = None,
+                 round_idx: int = 0) -> jnp.ndarray:
+    """Corrupt the machine-axis rows of ``values`` selected by ``mask``.
+
+    ``values``: (m, ...); ``mask``: (m,) bool. Returns a corrupted copy
+    whose honest rows are bit-identical to the input — the attack is
+    applied to the *transmitted* message only, matching the paper's
+    threat model (local data stays clean; the wire is corrupted).
+    ``round_idx`` is the transmission's position within Algorithm 1
+    (0-based); only round-aware attacks read it.
+
+    Raises ``ValueError`` for an unregistered attack, or when a
+    randomness-consuming attack (``needs_key``) is dispatched without a
+    PRNG key.
+    """
+    name = resolve(attack)
+    if name == "none":
+        return values
+    try:
+        entry = get_attack(name)
+    except KeyError as e:
+        # historical core/byzantine.py contract raised ValueError; keep
+        # the registry's message as the single source of truth
+        raise ValueError(e.args[0]) from None
+    if entry.needs_key and key is None:
+        raise ValueError(
+            f"attack {entry.name!r} draws randomness (needs_key=True) but "
+            f"apply_attack was called with key=None; pass a jax.random "
+            f"PRNG key")
+    kw = {"round_idx": round_idx} if entry.round_aware else {}
+    bad = entry.corrupt(values, mask, factor, key, **kw)
+    sel = mask.reshape((-1,) + (1,) * (values.ndim - 1))
+    return jnp.where(sel, bad, values)

@@ -1,0 +1,120 @@
+"""Pure corruption rules: the attack implementations behind the registry.
+
+Every rule maps the full transmitted stack ``values (m, ...)`` to the
+adversarial replacement rows; the dispatcher masks them back onto the
+Byzantine rows (honest rows are never touched here). All rules are pure
+jnp and jit/vmap-compatible, including under a traced ``factor`` (the
+sweep executor batches attack factors along a vmap axis).
+
+Wire attacks (read nothing but their own row):
+
+  * ``scaling_attack``        transmit ``factor`` x the true statistic —
+    the paper's §5.1 experiment (factor -3 synthetic, +3 MNIST);
+  * ``sign_flip_attack``      transmit the negated statistic;
+  * ``gaussian_attack``       additive N(0, sigma^2) noise, sigma=|factor|;
+  * ``random_value_attack``   replace with |factor| x N(0, 1) garbage;
+  * ``zero_attack``           transmit zeros — a silent drop-out/free-rider
+    that biases means toward the origin yet looks like a benign message;
+  * ``adaptive_scale_attack`` scaling that ramps linearly from benign (1x)
+    at the first transmission to ``factor`` x at the last, evading
+    detectors calibrated on early rounds.
+
+Omniscient attacks (read honest-machine statistics via the mask —
+the coordinated adversaries of ROSE (arXiv:2307.07767) and the
+Newton-like M-estimation line (arXiv:2207.06253) that sort/quantile
+aggregators are weakest against):
+
+  * ``alie_attack``  "a little is enough" (Baruch et al. 2019): transmit
+    ``honest_mean - factor * honest_std`` — a small consistent shift that
+    hides inside the honest spread, so per-coordinate medians/quantiles
+    move without any row looking like an outlier;
+  * ``ipm_attack``   inner-product manipulation (Xie et al. 2020):
+    transmit ``-factor * honest_mean`` so the aggregate loses positive
+    inner product with the honest descent direction.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: Algorithm 1 performs five p-vector transmissions; round-aware rules
+#: ramp over round_idx 0..N_PROTOCOL_ROUNDS-1.
+N_PROTOCOL_ROUNDS = 5
+
+
+def byzantine_mask(key: jax.Array, m: int, alpha: float) -> jnp.ndarray:
+    """Choose floor(alpha*m) machines (excluding the center, which is
+    machine index -1 conceptually; the caller decides indexing)."""
+    n_byz = int(alpha * m)
+    perm = jax.random.permutation(key, m)
+    return jnp.zeros((m,), bool).at[perm[:n_byz]].set(True)
+
+
+def honest_mean_std(values: jnp.ndarray,
+                    mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-coordinate mean/std over the HONEST rows (mask False) — what an
+    omniscient adversary reconstructs from the transmissions it observes.
+    All-Byzantine masks degenerate to (0, 0) instead of dividing by zero."""
+    honest = (~mask).astype(values.dtype)
+    honest = honest.reshape((-1,) + (1,) * (values.ndim - 1))
+    count = jnp.maximum(honest.sum(axis=0), 1.0)
+    mean = (values * honest).sum(axis=0) / count
+    var = (((values - mean) ** 2) * honest).sum(axis=0) / count
+    return mean, jnp.sqrt(var)
+
+
+# ------------------------------------------------------------- wire attacks
+
+def scaling_attack(values: jnp.ndarray, factor: float = -3.0) -> jnp.ndarray:
+    return factor * values
+
+
+def sign_flip_attack(values: jnp.ndarray) -> jnp.ndarray:
+    return -values
+
+
+def gaussian_attack(values: jnp.ndarray, key: jax.Array,
+                    sigma: float = 10.0) -> jnp.ndarray:
+    return values + sigma * jax.random.normal(key, values.shape, values.dtype)
+
+
+def random_value_attack(values: jnp.ndarray, key: jax.Array,
+                        scale: float = 10.0) -> jnp.ndarray:
+    return scale * jax.random.normal(key, values.shape, values.dtype)
+
+
+def zero_attack(values: jnp.ndarray) -> jnp.ndarray:
+    return jnp.zeros_like(values)
+
+
+def adaptive_scale_attack(values: jnp.ndarray, factor: float,
+                          round_idx: int = 0) -> jnp.ndarray:
+    """Scaling coefficient ramps linearly over the protocol's rounds:
+    1x (benign) at round_idx 0 up to ``factor`` x at the final round.
+    Beyond the protocol's rounds (e.g. the GD baseline's T > 5 loop) the
+    ramp clamps at full strength."""
+    ramp = jnp.minimum(
+        jnp.asarray(round_idx, values.dtype) / (N_PROTOCOL_ROUNDS - 1), 1.0)
+    coeff = 1.0 + (factor - 1.0) * ramp
+    return coeff * values
+
+
+# ------------------------------------------------------- omniscient attacks
+
+def alie_attack(values: jnp.ndarray, mask: jnp.ndarray,
+                z: float = 1.0) -> jnp.ndarray:
+    """'A little is enough': hide ``z`` honest standard deviations below
+    the honest mean — inside the honest spread, invisible to outlier
+    screens, yet enough to drag quantile aggregates."""
+    mean, std = honest_mean_std(values, mask)
+    return jnp.broadcast_to(mean - z * std, values.shape)
+
+
+def ipm_attack(values: jnp.ndarray, mask: jnp.ndarray,
+               eps: float = 1.0) -> jnp.ndarray:
+    """Inner-product manipulation: transmit the negated (scaled) honest
+    mean so the aggregate opposes the honest direction."""
+    mean, _ = honest_mean_std(values, mask)
+    return jnp.broadcast_to(-eps * mean, values.shape)

@@ -19,9 +19,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import attacks
 from repro.agg import aggregate
 from repro.configs.base import ProtocolConfig
-from repro.core import byzantine as byz
 from repro.core import dp, local
 from repro.core.losses import MEstimationProblem
 
@@ -66,7 +66,8 @@ def newton_estimator(problem: MEstimationProblem, cfg: ProtocolConfig,
         lam = cfg.lambda_s
     s1 = dp.s1_theta(p, n, cfg.gammas[0], eps_r, delta_r, lam, cfg.tail)
     theta_dp = theta_local if cfg.noiseless else dp.add_noise(keys[0], theta_local, s1)
-    theta_dp = byz.apply_attack(theta_dp, byz_mask, attack, attack_factor, keys[1])
+    theta_dp = attacks.apply_attack(theta_dp, byz_mask, attack,
+                                    attack_factor, keys[1], round_idx=0)
     acct.spend("R1 theta", eps_r, delta_r, s1)
     theta_init = jnp.median(theta_dp, axis=0)
 
@@ -79,8 +80,14 @@ def newton_estimator(problem: MEstimationProblem, cfg: ProtocolConfig,
     if not cfg.noiseless:
         grads = dp.add_noise(keys[2], grads, s2g)
         hesss = dp.add_noise(keys[3], hesss, s2h)
-    grads = byz.apply_attack(grads, byz_mask, attack, attack_factor, keys[4])
-    hesss = byz.apply_attack(hesss, byz_mask, attack, attack_factor, keys[5])
+    # final transmission of this 2-round baseline: ramping attacks hit at
+    # terminal strength (round_idx would otherwise freeze them mid-ramp
+    # and misreport the baseline as artificially robust)
+    last = attacks.N_PROTOCOL_ROUNDS - 1
+    grads = attacks.apply_attack(grads, byz_mask, attack, attack_factor,
+                                 keys[4], round_idx=last)
+    hesss = attacks.apply_attack(hesss, byz_mask, attack, attack_factor,
+                                 keys[5], round_idx=last)
     acct.spend("R2 grad", eps_r / 2, delta_r / 2, s2g)
     acct.spend("R2 hessian", eps_r / 2, delta_r / 2, s2h)
 
@@ -118,8 +125,10 @@ def gd_estimator(problem: MEstimationProblem, cfg: ProtocolConfig,
         grads = jax.vmap(lambda Xi, yi: problem.grad(theta, Xi, yi))(X, y)
         if not cfg.noiseless:
             grads = dp.add_noise(keys[2 * t], grads, s2)
-        grads = byz.apply_attack(grads, byz_mask, attack, attack_factor,
-                                 keys[2 * t + 1])
+        # round_idx = t: ramping attacks climb over the first protocol-
+        # length window of GD rounds, then clamp at full strength
+        grads = attacks.apply_attack(grads, byz_mask, attack, attack_factor,
+                                     keys[2 * t + 1], round_idx=t)
         g = aggregate(grads, method="median", axis=0)
         theta = theta - lr * g
         acct.spend(f"GD round {t}", eps_r, delta_r, s2)

@@ -1,61 +1,13 @@
-"""Byzantine failure models (paper §1.1, §5.1).
+"""DEPRECATED shim — the Byzantine threat models moved to
+``repro.attacks`` (the registry-backed threat-model subsystem).
 
-A Byzantine machine sends arbitrary statistics; the paper's experiments use
-a *scaling attack*: transmit ``factor`` times the true statistic (factor -3
-for synthetic, +3 for MNIST). We also implement sign-flip, additive
-Gaussian, and random-value attacks for wider coverage.
-
-``apply_attack(values, mask, ...)`` corrupts the machine-axis rows selected
-by ``mask`` — it is applied to the *transmitted* message only, matching the
-paper's threat model (local data stays clean; the wire is corrupted).
+Import ``repro.attacks.apply_attack`` / the rule functions in new code;
+this module re-exports the historical names so pinned imports keep
+working, exactly like ``core/robust_agg.py`` does for ``repro.agg``.
+See README "Threat models" for the registry table.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-
-def byzantine_mask(key: jax.Array, m: int, alpha: float) -> jnp.ndarray:
-    """Choose floor(alpha*m) machines (excluding the center, which is machine
-    index -1 conceptually; the caller decides indexing)."""
-    n_byz = int(alpha * m)
-    perm = jax.random.permutation(key, m)
-    return jnp.zeros((m,), bool).at[perm[:n_byz]].set(True)
-
-
-def scaling_attack(values: jnp.ndarray, factor: float = -3.0) -> jnp.ndarray:
-    return factor * values
-
-
-def sign_flip_attack(values: jnp.ndarray) -> jnp.ndarray:
-    return -values
-
-
-def gaussian_attack(values: jnp.ndarray, key: jax.Array,
-                    sigma: float = 10.0) -> jnp.ndarray:
-    return values + sigma * jax.random.normal(key, values.shape, values.dtype)
-
-
-def random_value_attack(values: jnp.ndarray, key: jax.Array,
-                        scale: float = 10.0) -> jnp.ndarray:
-    return scale * jax.random.normal(key, values.shape, values.dtype)
-
-
-def apply_attack(values: jnp.ndarray, mask: jnp.ndarray,
-                 attack: str = "scale", factor: float = -3.0,
-                 key: jax.Array | None = None) -> jnp.ndarray:
-    """values: (m, ...); mask: (m,) bool. Returns corrupted copy."""
-    if attack == "none":
-        return values
-    if attack == "scale":
-        bad = scaling_attack(values, factor)
-    elif attack == "signflip":
-        bad = sign_flip_attack(values)
-    elif attack == "gauss":
-        bad = gaussian_attack(values, key, sigma=abs(factor))
-    elif attack == "random":
-        bad = random_value_attack(values, key, scale=abs(factor))
-    else:
-        raise ValueError(f"unknown attack {attack!r}")
-    mask = mask.reshape((-1,) + (1,) * (values.ndim - 1))
-    return jnp.where(mask, bad, values)
+from repro.attacks import (apply_attack, byzantine_mask,  # noqa: F401
+                           gaussian_attack, random_value_attack,
+                           scaling_attack, sign_flip_attack)

@@ -13,7 +13,11 @@ Every center-side reduction — the per-round aggregation AND the
 untrusted-center median/variance plug-ins — routes through the
 ``repro.agg`` registry (jnp reference off-TPU, the batched Pallas
 order-statistics kernel on TPU), so the protocol inherits any newly
-registered aggregator via ``cfg.aggregator``.
+registered aggregator via ``cfg.aggregator``. Symmetrically, every wire
+corruption routes through the ``repro.attacks`` registry: the ``attack``
+argument names a registered threat model, corruption is applied where the
+full machine axis is visible (omniscient attacks read honest-row
+statistics), and round-aware attacks receive the transmission index.
 
 Round structure (five p-vector transmissions):
   R1  theta_hat_j + b1          -> DCQ -> theta_cq            (4.2)/(4.4)
@@ -48,9 +52,9 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import attacks
 from repro.agg import aggregate, median_deviation_variance
 from repro.configs.base import ProtocolConfig
-from repro.core import byzantine as byz
 from repro.core import dp, local
 from repro.core.bfgs import VOp, make_v
 from repro.core.losses import MEstimationProblem
@@ -227,9 +231,13 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     if theta0 is None:
         theta0 = jnp.zeros((p,), X.dtype)
 
-    def corrupt(vals, kk):
-        return byz.apply_attack(vals, byz_mask, attack=attack,
-                                factor=attack_factor, key=kk)
+    def corrupt(vals, kk, rnd):
+        # rnd = 0-based transmission index (round-aware attacks ramp on
+        # it); omniscient attacks see the full machine axis here, exactly
+        # the coordinated-adversary view of the wire.
+        return attacks.apply_attack(vals, byz_mask, attack=attack,
+                                    factor=attack_factor, key=kk,
+                                    round_idx=rnd)
 
     def noise(kk, x, s):
         if cfg.noiseless:
@@ -258,7 +266,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     theta_dp = theta_local if cfg.noiseless else (
         theta_local + s1_j[:, None]
         * jax.random.normal(keys[0], theta_local.shape, X.dtype))
-    theta_dp = corrupt(theta_dp, keys[1])
+    theta_dp = corrupt(theta_dp, keys[1], 0)
     sig.append(s1)
 
     theta_med = aggregate(theta_dp, "median", axis=0)
@@ -282,7 +290,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
                         X, y, bcast=(theta_cq,))
     s2 = sb["R2 grad"]
     grads_dp = noise(keys[2], grads, s2)
-    grads_dp = corrupt(grads_dp, keys[3])
+    grads_dp = corrupt(grads_dp, keys[3], 1)
     sig.append(s2)
 
     s2_eff = 0.0 if cfg.noiseless else s2
@@ -296,9 +304,10 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
         node_gvar = jax.vmap(
             lambda Xi, yi: prob.grad_variance(theta_cq, Xi, yi))(X[1:], y[1:])
         node_gvar = noise(keys[4], node_gvar, s6)
-        node_gvar = byz.apply_attack(node_gvar, byz_mask[1:],
-                                     attack=attack, factor=attack_factor,
-                                     key=keys[5])
+        node_gvar = attacks.apply_attack(node_gvar, byz_mask[1:],
+                                         attack=attack,
+                                         factor=attack_factor,
+                                         key=keys[5], round_idx=1)
         gvar = aggregate(node_gvar, "median", axis=0)
         sig.append(s6)
     scale2 = jnp.sqrt(jnp.maximum(gvar, 1e-12) + n * s2_eff ** 2) / jnp.sqrt(n)
@@ -314,7 +323,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     s3_j = (s3 / lam_j) * dir_norm                     # per-machine sd
     dirs_dp = dirs if cfg.noiseless else (
         dirs + s3_j[:, None] * jax.random.normal(keys[6], dirs.shape, X.dtype))
-    dirs_dp = corrupt(dirs_dp, keys[7])
+    dirs_dp = corrupt(dirs_dp, keys[7], 2)
     sig.append(s3)
 
     if cfg.center_trust == "trusted":
@@ -335,7 +344,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     s4_eff = s4 * jnp.linalg.norm(step)
     gdiff_dp = gdiff if cfg.noiseless else (
         gdiff + s4_eff * jax.random.normal(keys[8], gdiff.shape, X.dtype))
-    gdiff_dp = corrupt(gdiff_dp, keys[9])
+    gdiff_dp = corrupt(gdiff_dp, keys[9], 3)
     sig.append(s4)
 
     if cfg.center_trust == "trusted":
@@ -367,7 +376,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     s5_j = s5 * jnp.linalg.norm(h3, axis=1)
     h3_dp = h3 if cfg.noiseless else (
         h3 + s5_j[:, None] * jax.random.normal(keys[10], h3.shape, X.dtype))
-    h3_dp = corrupt(h3_dp, keys[11])
+    h3_dp = corrupt(h3_dp, keys[11], 4)
     sig.append(s5)
 
     if cfg.center_trust == "trusted":

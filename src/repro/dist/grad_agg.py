@@ -11,7 +11,9 @@ composed by ``robust_aggregate``. With ``method="mean"``, ``dp_sigma=0``
 and ``attack="none"`` this reduces exactly to data-parallel gradient
 averaging (asserted in tests/test_train.py).
 
-Aggregation dispatches through the ``repro.agg`` registry. The DCQ path
+Aggregation dispatches through the ``repro.agg`` registry; the Byzantine
+corruption step dispatches through the ``repro.attacks`` registry (the
+historical launcher aliases "sign"/"noise" still resolve). The DCQ path
 has no oracle scale (unlike the convex protocol, which transmits variance
 estimates), so it uses the MAD-calibrated ``"dcq_mad"`` variant: median
 anchor, 1.4826*MAD scale, composite-quantile correction. On TPU it runs
@@ -27,11 +29,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro import agg
-from repro.core import byzantine as byz
-
-# launcher-friendly aliases for the attack names in core/byzantine.py
-_ATTACK_ALIASES = {"sign": "signflip", "noise": "gauss"}
+from repro import agg, attacks
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,7 +37,7 @@ class GradAggConfig:
     """Configuration of the attack -> noise -> aggregation pipeline."""
     method: str = "dcq"            # mean | median | trimmed | dcq
     dp_sigma: float = 0.0          # per-machine Gaussian mechanism s.d.
-    attack: str = "none"           # none | scale | signflip | gauss | random
+    attack: str = "none"           # any repro.attacks registry name/alias
     attack_factor: float = -3.0
     trim_beta: float = 0.2         # trimmed-mean fraction
     K: int = 10                    # DCQ composite-quantile levels
@@ -65,15 +63,21 @@ def add_dp_noise(grads: Any, sigma: float, key: jax.Array) -> Any:
 def corrupt_machines(grads: Any, byz_mask: Optional[jnp.ndarray],
                      cfg: GradAggConfig, key: jax.Array) -> Any:
     """Apply the configured Byzantine attack to the machine rows selected
-    by ``byz_mask`` on every leaf. ``mask=None``, an all-False mask, or
-    ``attack="none"`` leave the pytree unchanged."""
-    if byz_mask is None or cfg.attack == "none":
+    by ``byz_mask`` on every leaf, dispatching through the
+    ``repro.attacks`` registry (aliases like "sign"/"noise" resolve).
+    ``mask=None``, an all-False mask, or ``attack="none"`` leave the
+    pytree unchanged. The training path transmits ONE message per step
+    (no round structure), so round-aware ramping attacks apply at
+    terminal (full) strength rather than silently degenerating to their
+    benign round-0 coefficient."""
+    attack = attacks.resolve(cfg.attack)
+    if byz_mask is None or attack == "none":
         return grads
-    attack = _ATTACK_ALIASES.get(cfg.attack, cfg.attack)
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     keys = jax.random.split(key, len(leaves))
-    out = [byz.apply_attack(leaf, byz_mask, attack=attack,
-                            factor=cfg.attack_factor, key=k)
+    out = [attacks.apply_attack(leaf, byz_mask, attack=attack,
+                                factor=cfg.attack_factor, key=k,
+                                round_idx=attacks.N_PROTOCOL_ROUNDS - 1)
            for leaf, k in zip(leaves, keys)]
     return jax.tree_util.tree_unflatten(treedef, out)
 

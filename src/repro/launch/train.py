@@ -15,6 +15,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.attacks import ALIASES as ATTACK_ALIASES
+from repro.attacks import registered as registered_attacks
 from repro.checkpoint import checkpoint
 from repro.configs import get_config
 from repro.data.lm import synthetic_lm_batches
@@ -24,7 +26,9 @@ from repro.train.optimizer import AdamW
 from repro.train.trainer import TrainConfig, Trainer
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
+    """The launcher CLI; --attack accepts every registered repro.attacks
+    name plus the historical aliases (resolved by the registry)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlstm-125m")
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -38,10 +42,15 @@ def main(argv=None):
     ap.add_argument("--dp-sigma", type=float, default=0.0)
     ap.add_argument("--byzantine", type=float, default=0.0)
     ap.add_argument("--attack", default="scale",
-                    choices=["none", "scale", "sign", "noise"])
+                    choices=sorted(set(registered_attacks())
+                                   | set(ATTACK_ALIASES)))
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt", default="")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = Model(cfg, remat=True)

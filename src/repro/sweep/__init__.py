@@ -13,7 +13,8 @@ from repro.sweep.artifact import (SCHEMA_VERSION, load, rows, save, to_csv,
 from repro.sweep.executor import SweepExecutor, run_scenarios
 from repro.sweep.grid import (Scenario, ScenarioGrid, group_label,
                               group_scenarios, scenario_from_json)
-from repro.sweep.presets import (PRESETS, build_preset, fast_variant,
+from repro.sweep.presets import (PRESETS, attack_sensitivity_scenarios,
+                                 build_preset, fast_variant,
                                  fig_eps_reference, fig_eps_scenarios,
                                  fig_m_scenarios, smoke_scenarios,
                                  table1_scenarios, untrusted_scenarios)
@@ -22,6 +23,7 @@ __all__ = ["SCHEMA_VERSION", "load", "rows", "save", "to_csv", "validate",
            "SweepExecutor", "run_scenarios",
            "Scenario", "ScenarioGrid", "group_label", "group_scenarios",
            "scenario_from_json",
-           "PRESETS", "build_preset", "fast_variant", "fig_eps_reference",
-           "fig_eps_scenarios", "fig_m_scenarios", "smoke_scenarios",
-           "table1_scenarios", "untrusted_scenarios"]
+           "PRESETS", "attack_sensitivity_scenarios", "build_preset",
+           "fast_variant", "fig_eps_reference", "fig_eps_scenarios",
+           "fig_m_scenarios", "smoke_scenarios", "table1_scenarios",
+           "untrusted_scenarios"]

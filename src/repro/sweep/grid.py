@@ -21,6 +21,8 @@ import itertools
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.agg import registered as registered_aggregators
+from repro.attacks import registered as registered_attacks
+from repro.attacks import resolve as resolve_attack
 from repro.configs.base import ProtocolConfig
 
 
@@ -44,7 +46,7 @@ class Scenario:
     eps: float = 30.0                  # total privacy budget
     delta: float = 0.05
     byz_frac: float = 0.0              # alpha: fraction of Byzantine machines
-    attack: str = "scale"              # repro.core.byzantine modes | "none"
+    attack: str = "scale"              # repro.attacks registry name | "none"
     attack_factor: float = -3.0
     aggregator: str = "dcq"            # dcq | median | trimmed | geomedian | mean
     center_trust: str = "trusted"      # trusted | untrusted (paper §4.3)
@@ -77,6 +79,15 @@ class Scenario:
             raise ValueError(
                 f"unknown aggregator {self.aggregator!r}; registered: "
                 f"{registered_aggregators()}")
+        # canonicalize launcher aliases ("sign"/"noise") so group_key and
+        # scenario_id are stable regardless of which name the caller used
+        object.__setattr__(self, "attack", resolve_attack(self.attack))
+        if self.attack not in registered_attacks():
+            # same contract on the adversary axis: the repro.attacks
+            # registry is the source of truth for sweepable threat models
+            raise ValueError(
+                f"unknown attack {self.attack!r}; registered: "
+                f"{registered_attacks()}")
 
     # ------------------------------------------------------------- identity
 

@@ -4,14 +4,23 @@ Builders are parameterized so the figure benchmarks stay thin wrappers
 (they reproduce their pre-refactor PRNG key schedules exactly via
 ``rep_seeds``); the CLI exposes them through ``PRESETS``:
 
-  smoke      2 losses x 2 attacks x 2 aggregators x 2 eps — CI gate, <5 min CPU
+  smoke      2 losses x 2 attacks x 2 aggregators x 2 eps, plus one
+             registry-path group (alie x dcq) — CI gate, <5 min CPU
   fig-eps    Figures 1/2/4/5: MRSE vs eps, normal + 10% Byzantine
   fig-m      Figures 3/6:     MRSE vs machine count m
   table1     Table 1 stand-in: digit-pair accuracy vs eps (+ Byzantine)
   untrusted  §4.3 sensitivity: center_trust x EVERY registered aggregator
              (the grid is driven by the repro.agg registry — a newly
              registered aggregator appears in this preset automatically)
-  paper      everything above except smoke/untrusted, in one artifact
+  attack-sensitivity
+             threat-model grid: EVERY registered attack x its declared
+             factor grid x {dcq, median, trimmed} x byz_frac {0.1, 0.2}
+             (driven by the repro.attacks registry — a newly registered
+             attack appears here automatically; factors and Byzantine
+             fractions ride the vmap axis, so the grid compiles once per
+             (attack, aggregator))
+  paper      everything above except smoke/untrusted/attack-sensitivity,
+             in one artifact
 """
 from __future__ import annotations
 
@@ -19,6 +28,8 @@ import dataclasses
 from typing import Dict, List, Tuple
 
 from repro.agg import registered as registered_aggregators
+from repro.attacks import get_attack
+from repro.attacks import registered as registered_attacks
 from repro.sweep.grid import Scenario, ScenarioGrid
 
 #: Figure 1-3 default privacy budgets (paper §5.1)
@@ -31,7 +42,9 @@ TABLE1_PAIRS: Dict[Tuple[int, int], int] = {(8, 9): 8, (6, 8): 5, (6, 9): 5}
 
 def smoke_scenarios() -> List[Scenario]:
     """CI smoke grid: 2 losses x 2 attacks x 2 aggregators x 2 eps = 16
-    scenarios in 8 jit groups (eps rides each group's vmap axis).
+    scenarios in 8 jit groups (eps rides each group's vmap axis), plus
+    one new-attack registry group (alie x dcq, 2 eps) so the
+    repro.attacks omniscient path is compiled and executed on every PR.
 
     m = 7 so the machine axis (m+1 = 8 rows, center included) shards
     evenly over 1/2/4/8 devices — ``--preset smoke --sharded`` works on
@@ -43,7 +56,14 @@ def smoke_scenarios() -> List[Scenario]:
         eps_grid=(10.0, 30.0),
         m_grid=(7,), byz_fracs=(0.15,),
         n=200, p=5, reps=2)
-    return grid.expand()
+    alie = ScenarioGrid(
+        problems=("logistic",),
+        attacks=("alie",), attack_factors=(1.0,),
+        aggregators=("dcq",),
+        eps_grid=(10.0, 30.0),
+        m_grid=(7,), byz_fracs=(0.15,),
+        n=200, p=5, reps=2)
+    return grid.expand() + alie.expand()
 
 
 # ------------------------------------------------- Figures 1/2/4/5 (vs eps)
@@ -108,6 +128,40 @@ def untrusted_scenarios(eps_grid: Tuple[float, ...] = (10.0, 30.0),
     return grid.expand()
 
 
+# --------------------------------------- attack-factor sensitivity (§5.1)
+
+#: aggregators the attack grid stresses (the paper's estimator + the two
+#: Yin-style robust baselines the related work attacks hardest)
+ATTACK_AGGREGATORS: Tuple[str, ...] = ("dcq", "median", "trimmed")
+
+
+def attack_sensitivity_scenarios(
+        aggregators: Tuple[str, ...] = ATTACK_AGGREGATORS,
+        byz_fracs: Tuple[float, ...] = (0.1, 0.2),
+        m: int = 10, n: int = 300, p: int = 5, reps: int = 3,
+        eps: float = 30.0) -> List[Scenario]:
+    """Threat-model sensitivity grid, driven by the repro.attacks registry.
+
+    EVERY registered attack with a non-empty ``factor_grid`` x its
+    declared factors x ``aggregators`` x ``byz_fracs``. attack_factor and
+    byz_frac are dynamic fields (they ride the executor's vmap axis), so
+    the whole grid compiles exactly once per (attack, aggregator) pair —
+    ``register(...)``-ing a new attack makes it sweepable here with no
+    preset change."""
+    out: List[Scenario] = []
+    for attack in registered_attacks():
+        factors = get_attack(attack).factor_grid
+        if not factors:                      # e.g. "none": nothing to sweep
+            continue
+        for agg in aggregators:
+            out += [Scenario(
+                problem="logistic", m=m, n=n, p=p, eps=eps, delta=0.05,
+                byz_frac=byz, attack=attack, attack_factor=float(factor),
+                aggregator=agg, reps=reps)
+                for factor in factors for byz in byz_fracs]
+    return out
+
+
 # --------------------------------------------------------- Table 1 (digits)
 
 def table1_scenarios(pair: Tuple[int, int], n_features: int,
@@ -161,6 +215,10 @@ def _build_untrusted() -> List[Scenario]:
     return untrusted_scenarios()
 
 
+def _build_attack_sensitivity() -> List[Scenario]:
+    return attack_sensitivity_scenarios()
+
+
 def _build_paper() -> List[Scenario]:
     return _build_fig_eps() + _build_fig_m() + _build_table1()
 
@@ -171,6 +229,7 @@ PRESETS = {
     "fig-m": _build_fig_m,
     "table1": _build_table1,
     "untrusted": _build_untrusted,
+    "attack-sensitivity": _build_attack_sensitivity,
     "paper": _build_paper,
 }
 

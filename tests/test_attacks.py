@@ -1,0 +1,373 @@
+"""repro.attacks subsystem: registry contracts (mirroring
+tests/test_agg.py), historical byte-parity for the four pre-existing wire
+attacks, omniscient/round-aware semantics, the needs_key dispatch bugfix,
+and the attack-sensitivity preset structure. The hypothesis property
+suite lives in tests/test_attacks_properties.py (importorskip-gated)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import attacks
+from repro.attacks import (ALIASES, Attack, apply_attack, byzantine_mask,
+                           get_attack, register, registered, resolve)
+
+M, P = 9, 6
+
+
+@pytest.fixture
+def stack():
+    v = jax.random.normal(jax.random.PRNGKey(0), (M, P)) * 2.0
+    mask = jnp.zeros((M,), bool).at[jnp.asarray([1, 4])].set(True)
+    return v, mask
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_contents():
+    names = registered()
+    for expected in ("none", "scale", "signflip", "gauss", "random",
+                     "zero", "adaptive_scale", "alie", "ipm"):
+        assert expected in names
+    assert get_attack("alie").omniscient
+    assert get_attack("ipm").omniscient
+    assert not get_attack("scale").omniscient
+    assert get_attack("gauss").needs_key
+    assert get_attack("random").needs_key
+    assert not get_attack("alie").needs_key
+    assert get_attack("adaptive_scale").round_aware
+    # every sweepable attack declares a factor grid; "none" declares none
+    assert get_attack("none").factor_grid == ()
+    for name in names:
+        if name != "none":
+            assert get_attack(name).factor_grid, name
+    with pytest.raises(KeyError, match="unknown attack"):
+        get_attack("nope")
+
+
+def test_aliases_resolve():
+    assert resolve("sign") == "signflip"
+    assert resolve("noise") == "gauss"
+    assert resolve("scale") == "scale"
+    assert get_attack("sign") is get_attack("signflip")
+    with pytest.raises(ValueError, match="shadows alias"):
+        register(Attack(name="sign", corrupt=lambda v, m, f, k: v))
+
+
+def test_register_new_attack_is_dispatchable_and_sweepable():
+    """Adding an attack is one registry entry: immediately usable from
+    apply_attack, accepted by Scenario validation, and expanded by the
+    attack-sensitivity preset."""
+    register(Attack(
+        name="_test_const",
+        corrupt=lambda values, mask, factor, key:
+            jnp.full_like(values, factor),
+        factor_grid=(7.0,)))
+    try:
+        v = jnp.zeros((4, 3))
+        mask = jnp.asarray([True, False, False, False])
+        out = apply_attack(v, mask, "_test_const", factor=7.0)
+        np.testing.assert_array_equal(np.asarray(out[0]), 7.0)
+        np.testing.assert_array_equal(np.asarray(out[1:]), 0.0)
+        from repro.sweep import Scenario, attack_sensitivity_scenarios
+        s = Scenario(m=4, n=50, p=3, attack="_test_const")
+        assert s.attack == "_test_const"
+        scens = attack_sensitivity_scenarios()
+        assert {s.attack_factor for s in scens
+                if s.attack == "_test_const"} == {7.0}
+    finally:
+        attacks.unregister("_test_const")
+
+
+def test_scenario_rejects_unregistered_attack():
+    from repro.sweep import Scenario
+    with pytest.raises(ValueError, match="unknown attack"):
+        Scenario(m=4, n=50, p=3, attack="typo")
+
+
+def test_scenario_canonicalizes_attack_aliases():
+    """A Scenario built with a launcher alias stores the canonical
+    registry name, so group_key/scenario_id are alias-independent."""
+    from repro.sweep import Scenario
+    a = Scenario(m=4, n=50, p=3, attack="sign")
+    b = Scenario(m=4, n=50, p=3, attack="signflip")
+    assert a.attack == "signflip"
+    assert a == b and a.scenario_id() == b.scenario_id()
+
+
+# ------------------------------------------------- historical byte-parity
+
+def test_wire_attacks_match_historical_formulas(stack):
+    """The four pre-registry attacks reproduce core/byzantine.py's exact
+    expressions (bit-identical: same ops, same key usage)."""
+    v, mask = stack
+    key = jax.random.PRNGKey(3)
+    sel = mask[:, None]
+    cases = {
+        ("scale", -3.0): jnp.where(sel, -3.0 * v, v),
+        ("signflip", 1.0): jnp.where(sel, -v, v),
+        ("gauss", -10.0): jnp.where(
+            sel, v + 10.0 * jax.random.normal(key, v.shape, v.dtype), v),
+        ("random", 10.0): jnp.where(
+            sel, 10.0 * jax.random.normal(key, v.shape, v.dtype), v),
+    }
+    for (name, factor), expect in cases.items():
+        got = apply_attack(v, mask, name, factor=factor, key=key)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect),
+                                      err_msg=name)
+
+
+def test_apply_attack_none_is_exact_noop(stack):
+    v, mask = stack
+    assert apply_attack(v, mask, "none") is v
+
+
+def test_honest_rows_bit_identical(stack):
+    v, mask = stack
+    key = jax.random.PRNGKey(5)
+    honest = np.asarray(~mask)
+    for name in registered():
+        got = apply_attack(v, mask, name, factor=2.0, key=key)
+        np.testing.assert_array_equal(
+            np.asarray(got)[honest], np.asarray(v)[honest], err_msg=name)
+        assert got.shape == v.shape and got.dtype == v.dtype, name
+
+
+# ---------------------------------------------------- needs_key (bugfix)
+
+@pytest.mark.parametrize("name", ["gauss", "random", "noise"])
+def test_needs_key_raises_clear_error_without_key(stack, name):
+    """Regression: key=None used to crash inside jax.random with an opaque
+    trace error; dispatch now rejects it with an actionable message."""
+    v, mask = stack
+    with pytest.raises(ValueError, match="PRNG key"):
+        apply_attack(v, mask, name, factor=3.0)
+    with pytest.raises(ValueError, match="PRNG key"):
+        apply_attack(v, mask, name, factor=3.0, key=None)
+
+
+def test_keyless_attacks_accept_key_none(stack):
+    v, mask = stack
+    for name in ("scale", "signflip", "zero", "alie", "ipm",
+                 "adaptive_scale"):
+        out = apply_attack(v, mask, name, factor=1.5, key=None)
+        assert out.shape == v.shape, name
+
+
+def test_unknown_attack_raises_value_error(stack):
+    """apply_attack keeps the historical ValueError contract."""
+    v, mask = stack
+    with pytest.raises(ValueError, match="unknown attack"):
+        apply_attack(v, mask, "nope")
+
+
+# ------------------------------------------------------- attack semantics
+
+def test_alie_hides_inside_honest_spread(stack):
+    v, mask = stack
+    got = np.asarray(apply_attack(v, mask, "alie", factor=1.5))
+    honest = np.asarray(v)[np.asarray(~mask)]
+    expect = honest.mean(0) - 1.5 * honest.std(0)
+    for i in np.flatnonzero(np.asarray(mask)):
+        np.testing.assert_allclose(got[i], expect, rtol=1e-5, atol=1e-6)
+
+
+def test_ipm_negates_honest_mean(stack):
+    v, mask = stack
+    got = np.asarray(apply_attack(v, mask, "ipm", factor=2.0))
+    expect = -2.0 * np.asarray(v)[np.asarray(~mask)].mean(0)
+    for i in np.flatnonzero(np.asarray(mask)):
+        np.testing.assert_allclose(got[i], expect, rtol=1e-5, atol=1e-6)
+
+
+def test_omniscient_stats_ignore_byzantine_rows(stack):
+    """Wild Byzantine inputs must not leak into the honest statistics an
+    omniscient attack reconstructs."""
+    v, mask = stack
+    wild = v.at[1].set(1e6).at[4].set(-1e6)
+    a = np.asarray(apply_attack(v, mask, "alie", factor=1.0))
+    b = np.asarray(apply_attack(wild, mask, "alie", factor=1.0))
+    np.testing.assert_allclose(a[np.asarray(mask)], b[np.asarray(mask)],
+                               rtol=1e-5)
+
+
+def test_zero_attack_drops_rows(stack):
+    v, mask = stack
+    got = np.asarray(apply_attack(v, mask, "zero", factor=1.0))
+    assert not got[np.asarray(mask)].any()
+
+
+def test_adaptive_scale_ramps_over_rounds(stack):
+    """1x (benign) at the first transmission, factor x at the last,
+    linear in between."""
+    v, mask = stack
+    r0 = apply_attack(v, mask, "adaptive_scale", factor=-3.0, round_idx=0)
+    np.testing.assert_array_equal(np.asarray(r0), np.asarray(v))
+    r4 = np.asarray(
+        apply_attack(v, mask, "adaptive_scale", factor=-3.0, round_idx=4))
+    np.testing.assert_allclose(r4[np.asarray(mask)],
+                               -3.0 * np.asarray(v)[np.asarray(mask)],
+                               rtol=1e-6)
+    r2 = np.asarray(
+        apply_attack(v, mask, "adaptive_scale", factor=-3.0, round_idx=2))
+    np.testing.assert_allclose(r2[np.asarray(mask)],
+                               -1.0 * np.asarray(v)[np.asarray(mask)],
+                               rtol=1e-5)
+
+
+def test_byzantine_mask_counts():
+    mask = byzantine_mask(jax.random.PRNGKey(0), 20, 0.15)
+    assert mask.shape == (20,) and int(mask.sum()) == 3
+
+
+def test_apply_attack_jits_with_traced_factor(stack):
+    """Factors ride a vmap axis in the sweep executor; every registered
+    attack must trace with a dynamic factor."""
+    v, mask = stack
+    key = jax.random.PRNGKey(2)
+    for name in registered():
+        f = jax.jit(lambda vv, fac, name=name: apply_attack(
+            vv, mask, name, factor=fac, key=key))
+        out = jax.vmap(lambda fac: f(v, fac))(jnp.asarray([1.0, 3.0]))
+        assert out.shape == (2,) + v.shape, name
+
+
+# ----------------------------------------------------- consumers / wiring
+
+def test_corrupt_machines_dispatches_through_registry():
+    from repro.dist.grad_agg import GradAggConfig, corrupt_machines
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (6, 4, 3)),
+             "b": jax.random.normal(jax.random.PRNGKey(2), (6, 3))}
+    mask = jnp.zeros((6,), bool).at[0].set(True)
+    key = jax.random.PRNGKey(3)
+    for attack in ("alie", "ipm", "zero", "sign", "noise"):
+        cfg = GradAggConfig(attack=attack)
+        out = corrupt_machines(grads, mask, cfg, key)
+        for leaf_name in ("w", "b"):
+            np.testing.assert_array_equal(
+                np.asarray(out[leaf_name][1:]),
+                np.asarray(grads[leaf_name][1:]), err_msg=attack)
+    with pytest.raises(ValueError, match="unknown attack"):
+        corrupt_machines(grads, mask, GradAggConfig(attack="typo"), key)
+
+
+def test_corrupt_machines_applies_ramping_attack_at_full_strength():
+    """Regression: the training path has no round structure, so a
+    round-aware ramping attack must hit at terminal strength there — not
+    silently degenerate to its benign round-0 coefficient (which would
+    report honest-execution results as robustness results)."""
+    from repro.dist.grad_agg import GradAggConfig, corrupt_machines
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (6, 4))}
+    mask = jnp.zeros((6,), bool).at[0].set(True)
+    key = jax.random.PRNGKey(3)
+    out = corrupt_machines(
+        grads, mask, GradAggConfig(attack="adaptive_scale",
+                                   attack_factor=-3.0), key)
+    np.testing.assert_allclose(np.asarray(out["w"][0]),
+                               -3.0 * np.asarray(grads["w"][0]), rtol=1e-6)
+    # the ramp clamps at full strength past the protocol's rounds (the
+    # GD baseline threads round_idx = t over T > 5 rounds)
+    v, m2 = grads["w"], mask
+    r9 = apply_attack(v, m2, "adaptive_scale", factor=-3.0, round_idx=9)
+    np.testing.assert_allclose(np.asarray(r9[0]),
+                               -3.0 * np.asarray(v[0]), rtol=1e-6)
+
+
+def test_byzantine_shim_serves_pinned_imports(stack):
+    """core/byzantine.py is a thin import shim over repro.attacks, like
+    core/robust_agg.py is over repro.agg."""
+    from repro.core import byzantine as byz
+    v, mask = stack
+    assert byz.apply_attack is attacks.apply_attack
+    np.testing.assert_array_equal(
+        np.asarray(byz.apply_attack(v, mask, "scale", -3.0)),
+        np.asarray(apply_attack(v, mask, "scale", factor=-3.0)))
+    assert byz.byzantine_mask is byzantine_mask
+    for fn in ("scaling_attack", "sign_flip_attack", "gaussian_attack",
+               "random_value_attack"):
+        assert getattr(byz, fn) is getattr(attacks, fn)
+
+
+def test_protocol_runs_omniscient_and_round_aware_attacks():
+    """Algorithm 1 end-to-end under the new threat models: compiles,
+    returns finite estimators, and the robust aggregator keeps the
+    corrupted run in the same ballpark as the clean one."""
+    from repro.configs.base import ProtocolConfig
+    from repro.core import DPQNProtocol, get_problem
+    from repro.data.synthetic import make_shards, target_theta
+    m, n, p = 8, 300, 4
+    X, y = make_shards(jax.random.PRNGKey(0), "logistic", m, n, p)
+    prob = get_problem("logistic")
+    cfg = ProtocolConfig(noiseless=True)
+    mask = jnp.zeros((m,), bool).at[0].set(True)
+    proto = DPQNProtocol(prob, cfg)
+    clean = proto.run(jax.random.PRNGKey(1), X, y)
+    err_clean = float(jnp.linalg.norm(clean.theta_qn - target_theta(p)))
+    for attack in ("alie", "ipm", "adaptive_scale", "zero"):
+        res = proto.run(jax.random.PRNGKey(1), X, y, byz_mask=mask,
+                        attack=attack, attack_factor=1.5)
+        err = float(jnp.linalg.norm(res.theta_qn - target_theta(p)))
+        assert np.isfinite(err), attack
+        assert err < err_clean + 1.0, attack
+
+
+def test_train_launcher_exposes_registry_attacks():
+    """The launcher's ACTUAL parser accepts every registered attack plus
+    the historical aliases, and still rejects typos."""
+    from repro.launch.train import build_parser
+    ap = build_parser()
+    for name in list(registered()) + list(ALIASES):
+        assert ap.parse_args(["--attack", name]).attack == name
+    with pytest.raises(SystemExit):
+        ap.parse_args(["--attack", "typo"])
+
+
+# ------------------------------------------- attack-sensitivity preset
+
+def test_attack_sensitivity_preset_structure():
+    """Every registered attack with a factor grid x its declared factors
+    x {dcq, median, trimmed} x byz_frac {0.1, 0.2}; one jit group per
+    (attack, aggregator)."""
+    from repro.sweep import build_preset, group_scenarios
+    from repro.sweep.presets import ATTACK_AGGREGATORS
+    scens = build_preset("attack-sensitivity")
+    sweepable = [n for n in registered() if get_attack(n).factor_grid]
+    assert {s.attack for s in scens} == set(sweepable)
+    assert {s.aggregator for s in scens} == set(ATTACK_AGGREGATORS)
+    assert {s.byz_frac for s in scens} == {0.1, 0.2}
+    for name in sweepable:
+        factors = {s.attack_factor for s in scens if s.attack == name}
+        assert factors == set(get_attack(name).factor_grid), name
+    groups = group_scenarios(scens)
+    assert len(groups) == len(sweepable) * len(ATTACK_AGGREGATORS)
+    assert len({(s.attack, s.aggregator) for s in scens}) == len(groups)
+
+
+def test_every_preset_validates_against_both_registries():
+    """Import-time guard: building a preset constructs every Scenario,
+    whose __post_init__ validates attack AND aggregator names against
+    their registries — a stale name in any preset fails here before CI
+    ever compiles anything."""
+    from repro.sweep import PRESETS, build_preset
+    for name in PRESETS:
+        scens = build_preset(name)
+        assert scens, name
+        for s in scens:
+            assert s.attack in registered(), (name, s.attack)
+
+
+def test_attack_sensitivity_compiles_once_per_group():
+    """Compile-counter contract on the registry path: a reduced
+    every-attack x dcq grid traces exactly once per (attack, aggregator)
+    jit group, with factors/byz_frac riding the vmap axis."""
+    from repro.sweep import SweepExecutor, attack_sensitivity_scenarios
+    scens = attack_sensitivity_scenarios(
+        aggregators=("dcq",), byz_fracs=(0.25,), m=4, n=80, p=3, reps=1)
+    executor = SweepExecutor()
+    art = executor.run(scens, store_thetas=False)
+    n_attacks = len([n for n in registered() if get_attack(n).factor_grid])
+    assert len(executor.trace_counts) == n_attacks
+    assert all(c == 1 for c in executor.trace_counts.values())
+    assert len(art["scenarios"]) == len(scens)
+    for rec in art["scenarios"].values():
+        assert np.isfinite(rec["metrics"]["mrse_qn"])

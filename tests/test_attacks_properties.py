@@ -1,0 +1,89 @@
+"""Hypothesis property tests for the repro.attacks subsystem: structural
+invariants of every registered attack — all-False masks are the identity,
+honest rows are bit-identical after corruption, shape/dtype preservation,
+and the signflip/scale(-1) equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.attacks import apply_attack, registered  # noqa: E402
+
+ATTACKS = registered()
+
+_settings = settings(max_examples=15, deadline=None)
+
+
+def _stack(m, p, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m, p)) * 3.0
+
+
+def _mask(m, idx):
+    sel = [i % m for i in idx]
+    return jnp.zeros((m,), bool).at[jnp.asarray(sel)].set(True) if sel \
+        else jnp.zeros((m,), bool)
+
+
+@_settings
+@given(m=st.integers(2, 30), p=st.integers(1, 40),
+       attack=st.sampled_from(ATTACKS), factor=st.floats(-10.0, 10.0),
+       seed=st.integers(0, 2**16))
+def test_all_false_mask_is_identity(m, p, attack, factor, seed):
+    """With no Byzantine machine selected, every registered attack is a
+    bit-exact no-op."""
+    v = _stack(m, p, seed)
+    out = apply_attack(v, jnp.zeros((m,), bool), attack, factor=factor,
+                       key=jax.random.PRNGKey(seed + 1))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(v))
+
+
+@_settings
+@given(m=st.integers(2, 30), p=st.integers(1, 40),
+       attack=st.sampled_from(ATTACKS), factor=st.floats(-10.0, 10.0),
+       idx=st.lists(st.integers(0, 63), max_size=8),
+       seed=st.integers(0, 2**16))
+def test_honest_rows_bit_identical_and_shape_dtype(m, p, attack, factor,
+                                                   idx, seed):
+    """Corruption never touches honest rows (whatever the attack, factor
+    or mask) and preserves the transmitted array's shape and dtype."""
+    v = _stack(m, p, seed)
+    mask = _mask(m, idx)
+    out = apply_attack(v, mask, attack, factor=factor,
+                       key=jax.random.PRNGKey(seed + 1))
+    assert out.shape == v.shape and out.dtype == v.dtype
+    honest = np.asarray(~mask)
+    np.testing.assert_array_equal(np.asarray(out)[honest],
+                                  np.asarray(v)[honest])
+
+
+@_settings
+@given(m=st.integers(2, 30), p=st.integers(1, 40),
+       idx=st.lists(st.integers(0, 63), min_size=1, max_size=8),
+       seed=st.integers(0, 2**16))
+def test_signflip_equals_scale_minus_one(m, p, idx, seed):
+    """signflip and scale(factor=-1) are the same attack, bitwise (both
+    flip the IEEE sign bit of the Byzantine rows)."""
+    v = _stack(m, p, seed)
+    mask = _mask(m, idx)
+    np.testing.assert_array_equal(
+        np.asarray(apply_attack(v, mask, "signflip", factor=1.0)),
+        np.asarray(apply_attack(v, mask, "scale", factor=-1.0)))
+
+
+@_settings
+@given(m=st.integers(3, 30), p=st.integers(1, 40),
+       z=st.floats(0.0, 5.0), seed=st.integers(0, 2**16))
+def test_alie_rows_stay_inside_honest_range_when_z_small(m, p, z, seed):
+    """ALIE with z=0 transmits exactly the honest mean; the corrupted rows
+    always lie within z honest standard deviations of it."""
+    v = _stack(m, p, seed)
+    mask = jnp.zeros((m,), bool).at[0].set(True)
+    out = np.asarray(apply_attack(v, mask, "alie", factor=z))
+    honest = np.asarray(v)[1:]
+    mean, std = honest.mean(0), honest.std(0)
+    np.testing.assert_allclose(out[0], mean - z * std, rtol=1e-4,
+                               atol=1e-5)

@@ -138,3 +138,36 @@ def test_spmd_protocol_byzantine_robust():
         print(json.dumps({'err': err}))
     """, devices=9)
     assert json.loads(out.strip().splitlines()[-1])["err"] < 0.5
+
+
+def test_spmd_protocol_omniscient_attack_matches_reference():
+    """Omniscient attacks (repro.attacks registry) read honest-row
+    statistics over the SHARDED machine axis — the masked reductions must
+    lower to collectives and agree with the single-host reference."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, json
+        from repro.configs.base import ProtocolConfig
+        from repro.core import DPQNProtocol, get_problem
+        from repro.data.synthetic import make_shards
+        from repro.dist.sharded_protocol import run_sharded
+        M, N, P_ = 7, 200, 4
+        X, y = make_shards(jax.random.PRNGKey(0), 'logistic', M, N, P_)
+        prob = get_problem('logistic')
+        cfg = ProtocolConfig(eps=30.0, delta=0.05, noiseless=True)
+        mesh = jax.make_mesh((4,), ('machines',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        mask = jnp.zeros((M,), bool).at[0].set(True)
+        deltas = {}
+        for attack in ('alie', 'ipm'):
+            res = run_sharded(prob, cfg, mesh, jax.random.PRNGKey(1), X, y,
+                              byz_mask=mask, attack=attack,
+                              attack_factor=1.5)
+            ref = DPQNProtocol(prob, cfg).run(
+                jax.random.PRNGKey(1), X, y, byz_mask=mask, attack=attack,
+                attack_factor=1.5)
+            deltas[attack] = float(
+                jnp.abs(res['theta_qn'] - ref.theta_qn).max())
+        print(json.dumps(deltas))
+    """, devices=4)
+    d = json.loads(out.strip().splitlines()[-1])
+    assert d["alie"] < 1e-5 and d["ipm"] < 1e-5

@@ -69,6 +69,10 @@ def test_smoke_preset_shape():
     assert len({s.problem for s in scens}) >= 2
     assert len({s.attack for s in scens}) >= 2
     assert len({s.aggregator for s in scens}) >= 2
+    # one registry-path group (omniscient alie x dcq) rides the CI grid,
+    # so every PR compiles and executes the repro.attacks dispatch
+    assert any(s.attack == "alie" and s.aggregator == "dcq"
+               for s in scens)
     groups = group_scenarios(scens)
     assert all(len(v) >= 2 for v in groups.values())
 
