@@ -1,6 +1,7 @@
 """Benchmark regression gates: compare fresh BENCH_protocol.json /
-BENCH_agg.json / BENCH_attacks.json records against the committed
-baselines and fail on a steady-state slowdown of a compiled hot path.
+BENCH_agg.json / BENCH_attacks.json / BENCH_train.json records against
+the committed baselines and fail on a steady-state slowdown of a
+compiled hot path.
 
     python -m benchmarks.check_regression \
         --fresh BENCH_protocol.json \
@@ -127,6 +128,26 @@ def compare_attacks(fresh: dict, baseline: dict,
                   "BENCH_attacks.json)")
 
 
+def compare_train(fresh: dict, baseline: dict,
+                  factor: float = 2.0) -> list:
+    """Gate for the quasi-Newton train-step record (BENCH_train.json,
+    benchmarks/train_bench.py): steady-state protocol-step wall time and
+    its same-machine cold->steady compile amortization; ``ok=false`` (the
+    train step traced more than once) fails outright."""
+    return _two_signal_gate(
+        fresh, baseline, factor,
+        setting_keys=("arch", "machines", "steps", "batch", "seq",
+                      "hist", "agg"),
+        wall_key="step_steady_s", speedup_key="speedup_steady",
+        label="qn train step",
+        speedup_label="cold->steady compile amortization",
+        ok_msg="the protocol train step retraced: compile-once violated",
+        regen_cmd="python -m benchmarks.train_bench --fast && "
+                  "cp BENCH_train.json benchmarks/baselines/"
+                  "BENCH_train_fast.json (then git checkout "
+                  "BENCH_train.json)")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", default="BENCH_protocol.json")
@@ -141,6 +162,11 @@ def main(argv=None) -> int:
                          "attack-sweep gate)")
     ap.add_argument("--baseline-attacks",
                     default="benchmarks/baselines/BENCH_attacks_fast.json")
+    ap.add_argument("--fresh-train", default=None,
+                    help="fresh BENCH_train.json (omit to skip the "
+                         "train-step gate)")
+    ap.add_argument("--baseline-train",
+                    default="benchmarks/baselines/BENCH_train_fast.json")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max tolerated slowdown (default 2x)")
     args = ap.parse_args(argv)
@@ -163,6 +189,13 @@ def main(argv=None) -> int:
             baseline_attacks = json.load(f)
         failures += compare_attacks(fresh_attacks, baseline_attacks,
                                     factor=args.factor)
+    if args.fresh_train:
+        with open(args.fresh_train) as f:
+            fresh_train = json.load(f)
+        with open(args.baseline_train) as f:
+            baseline_train = json.load(f)
+        failures += compare_train(fresh_train, baseline_train,
+                                  factor=args.factor)
     for msg in failures:
         print(f"REGRESSION: {msg}", file=sys.stderr)
     print("PASS" if not failures else "FAIL")

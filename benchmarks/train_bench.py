@@ -1,0 +1,118 @@
+"""Quasi-Newton train-step throughput: cold (compile) vs steady state.
+
+One protocol train step (core.protocol.protocol_tree_rounds via
+train/trainer.make_qn_train_step) is the model-zoo hot path: five DP
+transmissions over the parameter pytree per optimizer step. This
+benchmark measures the first call (including compilation) and the
+steady-state mean, and asserts the compile-once contract — the step must
+trace exactly once no matter how many steps run.
+
+Writes BENCH_train.json at the repo root:
+
+    PYTHONPATH=src python -m benchmarks.train_bench --fast
+
+The nightly pipeline compares the record against the committed
+benchmarks/baselines/BENCH_train_fast.json via check_regression.py
+(fourth gate): wall-clock AND the same-machine cold->steady
+amortization ratio must both regress >2x to fail, so machine speed
+cancels out.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import TreeProtocolConfig
+from repro.data.lm import make_batch
+from repro.models.model import Model
+from repro.train.trainer import QNTrainConfig, make_qn_train_step
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(_REPO_ROOT, "BENCH_train.json")
+
+
+def measure(arch: str = "xlstm-125m", steps: int = 4, batch: int = 8,
+            seq: int = 16, machines: int = 4, hist: int = 5,
+            agg: str = "dcq_mad", seed: int = 0) -> dict:
+    cfg = get_config(arch, reduced=True)
+    model = Model(cfg, remat=True)
+    params = model.init(jax.random.PRNGKey(seed))
+    qcfg = QNTrainConfig(
+        n_machines=machines, attack="signflip",
+        protocol=TreeProtocolConfig(hist=hist, lr=0.3, aggregator=agg))
+    traces = {"n": 0}
+    raw_step = make_qn_train_step(model, qcfg)
+
+    def counted(params, mem, batch, key, byz_mask):
+        traces["n"] += 1
+        return raw_step(params, mem, batch, key, byz_mask)
+
+    step_fn = jax.jit(counted)
+    from repro.core.bfgs import LBFGSMemory
+    mem = LBFGSMemory.init_like(hist, params, machines=machines)
+    byz = jnp.arange(machines) < 1
+    key = jax.random.PRNGKey(seed + 1)
+    batches = [make_batch(jax.random.fold_in(key, i), cfg, batch, seq)
+               for i in range(steps)]
+
+    t0 = time.perf_counter()
+    params, mem, metrics = step_fn(params, mem, batches[0],
+                                   jax.random.fold_in(key, 1000), byz)
+    jax.block_until_ready(params)
+    t_cold = time.perf_counter() - t0            # includes compilation
+
+    t0 = time.perf_counter()
+    for i in range(1, steps):
+        params, mem, metrics = step_fn(params, mem, batches[i],
+                                       jax.random.fold_in(key, 1000 + i),
+                                       byz)
+    jax.block_until_ready(params)
+    t_steady = (time.perf_counter() - t0) / max(1, steps - 1)
+
+    return {
+        "setting": {"arch": arch, "machines": machines, "steps": steps,
+                    "batch": batch, "seq": seq, "hist": hist, "agg": agg,
+                    "device": jax.devices()[0].platform,
+                    "jax": jax.__version__},
+        "step_cold_s": t_cold,
+        "step_steady_s": t_steady,
+        "speedup_steady": t_cold / t_steady,
+        "steps_per_s": 1.0 / t_steady,
+        "traces": traces["n"],
+        # compile-once: every post-compile step reuses the one executable
+        "ok": traces["n"] == 1,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--machines", type=int, default=4)
+    ap.add_argument("--hist", type=int, default=5)
+    ap.add_argument("--agg", default="dcq_mad")
+    ap.add_argument("--fast", action="store_true",
+                    help="nightly/baseline setting (4 steps)")
+    ap.add_argument("--out", default=BENCH_PATH)
+    args = ap.parse_args(argv)
+    steps = 4 if args.fast else args.steps
+    record = measure(arch=args.arch, steps=steps, batch=args.batch,
+                     seq=args.seq, machines=args.machines, hist=args.hist,
+                     agg=args.agg)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(json.dumps(record, indent=1))
+    print(f"wrote {args.out}")
+    return 0 if record["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

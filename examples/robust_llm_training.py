@@ -1,11 +1,19 @@
-"""End-to-end driver (deliverable b): train a ~100M-parameter model for a
-few hundred steps with the paper's robust DP aggregation, comparing
-mean vs DCQ under Byzantine machines.
+"""End-to-end driver: robust DP QUASI-NEWTON training of an LLM.
 
-The full xlstm-125m config (125M params) trains on CPU; pass --small for a
-quick run on the reduced config.
+Every optimizer step is one run of the paper's Algorithm 1 over the
+model's parameter pytree — the same five-transmission protocol engine
+(core/protocol.protocol_tree_rounds) that produces the p=10 logistic
+figures, here driving xlstm-125m. Per-round the machines transmit theta,
+gradients, L-BFGS directions, gradient differences and corrected
+directions; every transmission is corrupted by a registry attack on the
+Byzantine machines, noised per-leaf at each leaf's own DP calibration,
+and combined by a registry aggregator.
 
-    PYTHONPATH=src python examples/robust_llm_training.py --steps 200
+The demo contrasts three settings on the reduced (toy-depth) config:
+clean mean, mean under a sign-flip attack (degrades), and DCQ-MAD under
+the same attack (the paper's aggregator; trains through it).
+
+    PYTHONPATH=src python examples/robust_llm_training.py --steps 30
 """
 import argparse
 import time
@@ -15,28 +23,35 @@ import jax.numpy as jnp
 
 from repro.checkpoint import checkpoint
 from repro.configs import get_config
+from repro.configs.base import TreeProtocolConfig
 from repro.data.lm import synthetic_lm_batches
-from repro.dist.grad_agg import GradAggConfig
 from repro.models.model import Model
-from repro.train.optimizer import AdamW
-from repro.train.trainer import TrainConfig, Trainer
+from repro.train.trainer import QNTrainConfig, QNTrainer
 
 
-def run(arch: str, reduced: bool, steps: int, batch: int, seq: int,
-        machines: int, method: str, byz_frac: float, dp_sigma: float,
-        seed: int = 0):
+def run(arch: str = "xlstm-125m", reduced: bool = True, steps: int = 30,
+        batch: int = 8, seq: int = 32, machines: int = 4,
+        aggregator: str = "dcq_mad", attack: str = "none",
+        byz_frac: float = 0.0, eps: float = 0.0, hist: int = 5,
+        lr: float = 0.3, seed: int = 0, log_every: int = 10):
+    """One QN training run; returns (params, mem, losses).
+
+    ``aggregator`` is any repro.agg registry name, ``attack`` any
+    repro.attacks registry name/alias; ``eps > 0`` turns on per-leaf DP
+    calibration (eps/5 per transmission, each leaf's sigma from its own
+    dimension).
+    """
     cfg = get_config(arch, reduced=reduced)
     model = Model(cfg, remat=True)
     params = model.init(jax.random.PRNGKey(seed))
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
-    attack = "scale" if byz_frac > 0 else "none"
-    tcfg = TrainConfig(
-        n_machines=machines,
-        agg=GradAggConfig(method=method, dp_sigma=dp_sigma, attack=attack,
-                          attack_factor=-3.0))
+    qcfg = QNTrainConfig(
+        n_machines=machines, attack=attack,
+        protocol=TreeProtocolConfig(hist=hist, lr=lr, eps=eps,
+                                    aggregator=aggregator))
     n_byz = int(byz_frac * machines)
     byz = (jnp.arange(machines) < n_byz) if n_byz else None
-    trainer = Trainer(model, AdamW(lr=1e-3), tcfg)
+    trainer = QNTrainer(model, qcfg)
     batches = synthetic_lm_batches(jax.random.PRNGKey(1), cfg, steps,
                                    batch, seq)
     losses = []
@@ -44,46 +59,54 @@ def run(arch: str, reduced: bool, steps: int, batch: int, seq: int,
 
     def cb(i, m):
         losses.append(float(m["loss"]))
-        if i % 20 == 0:
+        if i % log_every == 0:
             print(f"    step {i:4d} loss {losses[-1]:.4f} "
                   f"({time.time()-t0:.0f}s)")
 
-    params, opt_state, _ = trainer.fit(params, batches,
-                                       jax.random.PRNGKey(2),
-                                       byz_mask=byz, callback=cb)
-    print(f"  [{method}{' +byz' if n_byz else ''}] {n_params/1e6:.0f}M "
-          f"params: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
-    return params, opt_state, losses
+    params, mem, _ = trainer.fit(params, batches, jax.random.PRNGKey(2),
+                                 byz_mask=byz, callback=cb)
+    tag = f"{aggregator}{f' +{attack}' if n_byz else ''}"
+    print(f"  [{tag}] {n_params/1e6:.1f}M params: "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return params, mem, losses
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlstm-125m")
-    ap.add_argument("--small", action="store_true")
-    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="full 125M config (slow on CPU); default is the "
+                    "reduced toy-depth variant")
+    ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--machines", type=int, default=8)
-    ap.add_argument("--byzantine", type=float, default=0.125)
-    ap.add_argument("--dp-sigma", type=float, default=1e-4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--machines", type=int, default=4)
+    ap.add_argument("--attack", default="signflip")
+    ap.add_argument("--byzantine", type=float, default=0.25)
+    ap.add_argument("--eps", type=float, default=0.0)
+    ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--ckpt", default="checkpoints/robust_llm.npz")
     args = ap.parse_args(argv)
+    reduced = not args.full
 
-    print(f"=== robust LLM training: {args.arch} "
-          f"({'reduced' if args.small else 'full'}) ===")
+    print(f"=== robust DP quasi-Newton training: {args.arch} "
+          f"({'reduced' if reduced else 'full'}) ===")
+    common = dict(arch=args.arch, reduced=reduced, steps=args.steps,
+                  batch=args.batch, seq=args.seq, machines=args.machines,
+                  eps=args.eps, lr=args.lr)
     print("-- clean mean baseline --")
-    run(args.arch, args.small, args.steps, args.batch, args.seq,
-        args.machines, "mean", 0.0, 0.0)
-    print(f"-- mean under {args.byzantine:.0%} Byzantine --")
-    run(args.arch, args.small, args.steps, args.batch, args.seq,
-        args.machines, "mean", args.byzantine, 0.0)
-    print(f"-- DCQ + DP under {args.byzantine:.0%} Byzantine (the paper) --")
-    params, opt_state, _ = run(args.arch, args.small, args.steps,
-                               args.batch, args.seq, args.machines, "dcq",
-                               args.byzantine, args.dp_sigma)
+    run(aggregator="mean", **common)
+    print(f"-- mean under {args.byzantine:.0%} {args.attack} --")
+    run(aggregator="mean", attack=args.attack, byz_frac=args.byzantine,
+        **common)
+    print(f"-- DCQ-MAD under {args.byzantine:.0%} {args.attack} "
+          f"(the paper) --")
+    params, mem, _ = run(aggregator="dcq_mad", attack=args.attack,
+                         byz_frac=args.byzantine, **common)
     if args.ckpt:
-        checkpoint.save(args.ckpt, params, opt_state, step=args.steps,
-                        meta={"arch": args.arch, "agg": "dcq"})
+        checkpoint.save(args.ckpt, params, {}, step=args.steps,
+                        meta={"arch": args.arch, "agg": "dcq_mad",
+                              "optimizer": "qn"})
         print(f"checkpoint -> {args.ckpt}")
 
 

@@ -130,6 +130,28 @@ SHAPES = {
 
 
 @dataclasses.dataclass(frozen=True)
+class TreeProtocolConfig:
+    """Algorithm 1's five transmissions at model scale (the pytree engine,
+    core/protocol.py protocol_tree_rounds). Quasi-Newton state is an
+    L-BFGS (s, y) history — 2*hist parameter copies, never a p x p matrix.
+    """
+    hist: int = 5                # L-BFGS memory length
+    lr: float = 0.5              # center step on aggregated directions
+    local_lr: float = 0.1        # R1 machine-local SGD step size
+    local_steps: int = 1         # R1 local steps (the local-estimator analog)
+    eps: float = 0.0             # TOTAL privacy budget; <= 0 => noiseless
+    delta: float = 0.05
+    gammas: Tuple[float, ...] = (2.0, 2.0, 2.0, 2.0, 2.0)
+    tail: str = "subexp"         # subexp | subgauss (Thm 4.5 vs Lemma 39)
+    # Registry aggregator. Default is the MAD-self-calibrated DCQ: the
+    # training wire transmits no variance estimates, so the oracle-scale
+    # "dcq" of the convex path does not apply.
+    aggregator: str = "dcq_mad"
+    K: int = 10
+    trim_beta: float = 0.2
+
+
+@dataclasses.dataclass(frozen=True)
 class ProtocolConfig:
     """Algorithm 1 configuration (paper §4)."""
     K: int = 10                  # composite-quantile levels (paper uses 10)

@@ -6,17 +6,19 @@ the historical names are re-exported here unchanged.
 from repro.agg import dcq, dcq_with_sigma, d_k, are_dcq, ARE_MEDIAN
 from repro.core.robust_agg import aggregate
 from repro.core.protocol import (DPQNProtocol, ProtocolArrays, ProtocolResult,
-                                 calibrate_sigma_base, monte_carlo_mrse,
-                                 n_transmissions, protocol_rounds,
+                                 ProtocolTreeArrays, calibrate_sigma_base,
+                                 monte_carlo_mrse, n_transmissions,
+                                 protocol_rounds, protocol_tree_rounds,
                                  round_budget, transmission_names,
                                  vmap_machines)
 from repro.core.losses import get_problem, PROBLEMS
-from repro.core import dp, bfgs, byzantine, local, baselines
+from repro.core import dp, bfgs, byzantine, local, baselines, transport
 
 __all__ = ["dcq", "dcq_with_sigma", "d_k", "are_dcq", "ARE_MEDIAN",
            "aggregate", "DPQNProtocol", "ProtocolArrays", "ProtocolResult",
-           "calibrate_sigma_base",
-           "protocol_rounds", "round_budget", "transmission_names",
+           "ProtocolTreeArrays", "calibrate_sigma_base",
+           "protocol_rounds", "protocol_tree_rounds", "round_budget",
+           "transmission_names",
            "n_transmissions", "monte_carlo_mrse", "vmap_machines",
            "get_problem", "PROBLEMS", "dp", "bfgs", "byzantine", "local",
-           "baselines"]
+           "baselines", "transport"]

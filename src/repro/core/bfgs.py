@@ -8,14 +8,24 @@ The protocol's second iteration updates every machine's inverse Hessian by
 and only ever needs matrix-vector products with V — we exploit the rank-1
 structure (``VOp``) so the center never materialises a p x p matrix
 (DESIGN.md hardware-adaptation note).
+
+Memory budget at model scale: the dense p x p inverse stays confined to
+the convex head (``bfgs_inverse_update``).  For the pytree engine the
+curvature state is an ``LBFGSMemory`` of ``hist`` (s, y) PAIRS — leaves
+shaped ``(hist, *leaf)`` — so quasi-Newton state costs ``2 * hist``
+parameter copies (hist=5 -> 10 copies) instead of p^2 floats; the
+two-loop recursion (``lbfgs_two_loop_tree``) applies the implied inverse
+Hessian with tree-wide inner products and never materialises a matrix.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.transport import tree_dot, tree_scale
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,9 +75,16 @@ def bfgs_dir_product(h_inv_apply: Callable[[jnp.ndarray], jnp.ndarray],
 
 @dataclasses.dataclass
 class LBFGSMemory:
-    """Fixed-size (s, y) history for two-loop products at NN scale."""
-    s_hist: jnp.ndarray      # (hist, p)
-    y_hist: jnp.ndarray      # (hist, p)
+    """Fixed-size (s, y) history for two-loop products at NN scale.
+
+    ``s_hist``/``y_hist`` are either flat ``(hist, p)`` arrays (the
+    historical convex path) or pytrees with ``(hist, *leaf)`` leaves (the
+    model-zoo path) — the flat form IS the single-leaf special case.  A
+    leading machine axis may sit in front of ``hist`` when per-machine
+    memories are carried under ``jax.vmap``.
+    """
+    s_hist: Any              # (hist, p) array or pytree of (hist, *leaf)
+    y_hist: Any
     count: jnp.ndarray       # scalar int
 
     @staticmethod
@@ -76,9 +93,26 @@ class LBFGSMemory:
                            jnp.zeros((hist, p), dtype),
                            jnp.zeros((), jnp.int32))
 
-    def push(self, s: jnp.ndarray, y: jnp.ndarray) -> "LBFGSMemory":
-        s_hist = jnp.roll(self.s_hist, -1, axis=0).at[-1].set(s)
-        y_hist = jnp.roll(self.y_hist, -1, axis=0).at[-1].set(y)
+    @staticmethod
+    def init_like(hist: int, tree: Any,
+                  machines: Optional[int] = None) -> "LBFGSMemory":
+        """Zeroed history shaped after ``tree``; with ``machines=m`` the
+        leaves get a leading machine axis ``(m, hist, *leaf)`` (and
+        ``count`` becomes ``(m,)``) for per-machine memories that a
+        ``jax.vmap`` over machines strips back down."""
+        lead = (machines, hist) if machines else (hist,)
+
+        def zeros(p):
+            return jnp.zeros(lead + tuple(p.shape), p.dtype)
+        count = jnp.zeros((machines,) if machines else (), jnp.int32)
+        return LBFGSMemory(jax.tree_util.tree_map(zeros, tree),
+                           jax.tree_util.tree_map(zeros, tree), count)
+
+    def push(self, s: Any, y: Any) -> "LBFGSMemory":
+        def roll(hist, v):
+            return jnp.roll(hist, -1, axis=0).at[-1].set(v)
+        s_hist = jax.tree_util.tree_map(roll, self.s_hist, s)
+        y_hist = jax.tree_util.tree_map(roll, self.y_hist, y)
         return LBFGSMemory(s_hist, y_hist, self.count + 1)
 
 
@@ -115,3 +149,50 @@ def lbfgs_two_loop(mem: LBFGSMemory, g: jnp.ndarray,
 
     r, _ = jax.lax.scan(fwd, r, (mem.s_hist, mem.y_hist, valid, alphas))
     return r
+
+
+def lbfgs_two_loop_tree(mem: LBFGSMemory, g: Any, gamma=1.0) -> Any:
+    """Two-loop recursion over an arbitrary gradient pytree.
+
+    ``jax.lax.scan`` slices every history leaf along its ``hist`` axis, so
+    each step sees one (s, y) pytree pair; curvatures are tree-wide inner
+    products. On a single flat leaf this computes exactly what
+    ``lbfgs_two_loop`` computes (asserted in tests/test_protocol_pytree.py).
+    """
+    hist_leaves = jax.tree_util.tree_leaves(mem.s_hist)
+    hist = hist_leaves[0].shape[0]
+    valid = jnp.arange(hist) >= jnp.maximum(hist - mem.count, 0)
+
+    def bwd(q, inp):
+        s, y, ok = inp
+        rho = jnp.where(ok, 1.0 / jnp.maximum(tree_dot(s, y), 1e-12), 0.0)
+        a = rho * tree_dot(s, q)
+        coef = jnp.where(ok, a, 0.0)
+        q = jax.tree_util.tree_map(lambda qq, yy: qq - coef * yy, q, y)
+        return q, a
+
+    q, alphas = jax.lax.scan(bwd, g, (mem.s_hist, mem.y_hist, valid),
+                             reverse=True)
+    r = tree_scale(gamma, q)
+
+    def fwd(r, inp):
+        s, y, ok, a = inp
+        rho = jnp.where(ok, 1.0 / jnp.maximum(tree_dot(s, y), 1e-12), 0.0)
+        b = rho * tree_dot(y, r)
+        coef = jnp.where(ok, a - b, 0.0)
+        r = jax.tree_util.tree_map(lambda rr, ss: rr + coef * ss, r, s)
+        return r, None
+
+    r, _ = jax.lax.scan(fwd, r, (mem.s_hist, mem.y_hist, valid, alphas))
+    return r
+
+
+def lbfgs_gamma(mem: LBFGSMemory) -> jnp.ndarray:
+    """Barzilai–Borwein initial scaling gamma = s.y / y.y of the most
+    recent pair; 1.0 while the memory is empty."""
+    s_last = jax.tree_util.tree_map(lambda h: h[-1], mem.s_hist)
+    y_last = jax.tree_util.tree_map(lambda h: h[-1], mem.y_hist)
+    sy = tree_dot(s_last, y_last)
+    yy = tree_dot(y_last, y_last)
+    return jnp.where(mem.count > 0,
+                     sy / jnp.maximum(yy, 1e-12), 1.0).astype(jnp.float32)

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -142,6 +142,78 @@ def s6_variance(p: int, n: int, gamma: float, eps, delta):
     return c * jnp.sqrt(jnp.log(1.25 * p / delta)) / eps
 
 
+# ------------------------------------------- per-leaf (pytree) calibration
+
+#: the five pytree-engine transmissions, in wire order (Algorithm 1's
+#: vector rounds at model scale; no untrusted-variance round).
+TREE_TRANSMISSIONS = ("R1 theta", "R2 grad", "R3 newton-dir",
+                      "R4 grad-diff", "R5 bfgs-dir")
+
+
+def tree_mean_sigma(tree_dims, n: int, gamma: float, eps_r: float,
+                    delta_r: float, tail: str = "subexp"):
+    """Per-leaf noise s.d. for ONE transmitted pytree: the Lemma 4.4 mean
+    mechanism calibrated at EACH leaf's own dimension ``d_leaf`` instead of
+    one global ``p``. A 4096-d embedding leaf and a 16-d norm-scale leaf in
+    the same transmission get different sigmas — the per-leaf sensitivity
+    2*gamma*sqrt(d_leaf)*log(n)/n is what (eps_r, delta_r)-DP actually
+    requires of each leaf, and the small leaves stop paying the big leaves'
+    sqrt(d) penalty.
+
+    ``tree_dims``: pytree of ints (``transport.tree_leaf_dims``). Returns
+    a matching pytree of Python-float sigmas (static, compile-once safe).
+    """
+    return jax.tree_util.tree_map(
+        lambda d: s2_grad(int(d), n, gamma, eps_r, delta_r, tail), tree_dims)
+
+
+def calibrate_tree_sigmas(tree, n: int, eps: float, delta: float,
+                          gammas=(2.0, 2.0, 2.0, 2.0, 2.0),
+                          tail: str = "subexp",
+                          machine_axis: bool = False):
+    """Per-transmission, per-leaf noise s.d. for the pytree protocol:
+    ``{transmission name: pytree of sigmas}``.
+
+    The total (eps, delta) is split evenly over the five transmissions
+    (basic composition, Remark 4.5). At model scale the norm-dependent
+    refinements of Thm 4.5 (s1, s3..s5 need ``lambda_s`` and direction
+    norms) are not available before the trace, so every transmission uses
+    the sub-exponential mean mechanism (Lemma 4.4 / Thm 4.5(2)) with its
+    round's ``gamma`` — conservative but valid, and per-leaf in dimension.
+    """
+    from repro.core.transport import tree_leaf_dims
+    k = len(TREE_TRANSMISSIONS)
+    eps_r, delta_r = eps / k, delta / k
+    dims = tree_leaf_dims(tree, machine_axis=machine_axis)
+    return {name: tree_mean_sigma(dims, n, gammas[i], eps_r, delta_r, tail)
+            for i, name in enumerate(TREE_TRANSMISSIONS)}
+
+
+def tree_spend_ledger(tree, n: int, eps: float, delta: float,
+                      gammas=(2.0, 2.0, 2.0, 2.0, 2.0),
+                      tail: str = "subexp",
+                      machine_axis: bool = False) -> List[dict]:
+    """Flat per-(transmission, leaf) spend records for the artifact ledger:
+    each entry carries the leaf path, its own dimension, and the sigma that
+    dimension bought — the per-leaf calibration made auditable."""
+    from repro.core.transport import leaf_paths, tree_leaf_dims
+    k = len(TREE_TRANSMISSIONS)
+    eps_r, delta_r = eps / k, delta / k
+    sigmas = calibrate_tree_sigmas(tree, n, eps, delta, gammas, tail,
+                                   machine_axis)
+    paths = leaf_paths(tree)
+    dims = jax.tree_util.tree_leaves(
+        tree_leaf_dims(tree, machine_axis=machine_axis))
+    records = []
+    for name in TREE_TRANSMISSIONS:
+        for path, d, s in zip(paths, dims,
+                              jax.tree_util.tree_leaves(sigmas[name])):
+            records.append({"transmission": name, "leaf": path,
+                            "dim": int(d), "sigma": float(s),
+                            "eps": eps_r, "delta": delta_r})
+    return records
+
+
 # ---------------------------------------------------------------- composition
 
 def compose_basic(budgets: List[Tuple[float, float]]) -> Tuple[float, float]:
@@ -173,6 +245,8 @@ class QueryRecord:
     delta: float
     sigma: float
     failure_prob: float = 0.0
+    per_leaf: Optional[List[dict]] = None   # pytree transmissions: one
+    #                                         {leaf, dim, sigma} per leaf
 
 
 class PrivacyAccountant:
@@ -188,6 +262,23 @@ class PrivacyAccountant:
     def spend(self, name: str, eps: float, delta: float, sigma: float,
               failure_prob: float = 0.0) -> None:
         self.records.append(QueryRecord(name, eps, delta, sigma, failure_prob))
+
+    def spend_tree(self, name: str, eps: float, delta: float,
+                   sigma_tree) -> None:
+        """One pytree transmission = ONE composition entry (all leaves are
+        released by a single mechanism under the same (eps, delta) — adding
+        per-leaf entries to the composition would over-count the budget).
+        The per-leaf sigmas ride on the record for the artifact ledger; the
+        reported scalar sigma is the worst (largest) leaf's."""
+        from repro.core.transport import leaf_paths
+        paths = leaf_paths(sigma_tree)
+        sig_leaves = [float(s) for s in
+                      jax.tree_util.tree_leaves(sigma_tree)]
+        per_leaf = [{"leaf": pth, "sigma": s}
+                    for pth, s in zip(paths, sig_leaves)]
+        self.records.append(QueryRecord(
+            name, eps, delta, max(sig_leaves) if sig_leaves else 0.0,
+            per_leaf=per_leaf))
 
     def total_basic(self) -> Tuple[float, float]:
         return compose_basic([(r.eps, r.delta) for r in self.records])

@@ -52,12 +52,15 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import attacks
 from repro.agg import aggregate, median_deviation_variance
-from repro.configs.base import ProtocolConfig
+from repro.configs.base import ProtocolConfig, TreeProtocolConfig
 from repro.core import dp, local
-from repro.core.bfgs import VOp, make_v
+from repro.core import transport
+from repro.core.bfgs import (LBFGSMemory, VOp, lbfgs_gamma,
+                             lbfgs_two_loop_tree, make_v)
 from repro.core.losses import MEstimationProblem
+from repro.core.transport import (tree_add, tree_axpy, tree_sub,
+                                  wire_aggregate, wire_corrupt, wire_noise)
 
 
 def vmap_machines(fn, *machine_args, bcast=()):
@@ -231,18 +234,19 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     if theta0 is None:
         theta0 = jnp.zeros((p,), X.dtype)
 
+    # The wire primitives are the shared pytree transport layer
+    # (core/transport.py): on these flat single-leaf arrays they consume
+    # each transmission key unsplit, so the refactor is byte-identical to
+    # the historical inline expressions (tests/test_protocol_pytree.py).
     def corrupt(vals, kk, rnd):
         # rnd = 0-based transmission index (round-aware attacks ramp on
         # it); omniscient attacks see the full machine axis here, exactly
         # the coordinated-adversary view of the wire.
-        return attacks.apply_attack(vals, byz_mask, attack=attack,
-                                    factor=attack_factor, key=kk,
-                                    round_idx=rnd)
+        return wire_corrupt(kk, vals, byz_mask, attack=attack,
+                            factor=attack_factor, round_idx=rnd)
 
     def noise(kk, x, s):
-        if cfg.noiseless:
-            return x
-        return dp.add_noise(kk, x, jnp.asarray(s, x.dtype))
+        return wire_noise(kk, x, s, noiseless=cfg.noiseless)
 
     Xc, yc = X[0], y[0]  # center's own shard
 
@@ -263,9 +267,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     s1_base = sb["R1 theta"]
     s1_j = s1_base / lam_j                         # per-machine sd
     s1 = aggregate(s1_j, "median")                 # reported/summary value
-    theta_dp = theta_local if cfg.noiseless else (
-        theta_local + s1_j[:, None]
-        * jax.random.normal(keys[0], theta_local.shape, X.dtype))
+    theta_dp = noise(keys[0], theta_local, s1_j)   # per-machine (m+1,) sd
     theta_dp = corrupt(theta_dp, keys[1], 0)
     sig.append(s1)
 
@@ -304,10 +306,9 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
         node_gvar = jax.vmap(
             lambda Xi, yi: prob.grad_variance(theta_cq, Xi, yi))(X[1:], y[1:])
         node_gvar = noise(keys[4], node_gvar, s6)
-        node_gvar = attacks.apply_attack(node_gvar, byz_mask[1:],
-                                         attack=attack,
-                                         factor=attack_factor,
-                                         key=keys[5], round_idx=1)
+        node_gvar = wire_corrupt(keys[5], node_gvar, byz_mask[1:],
+                                 attack=attack, factor=attack_factor,
+                                 round_idx=1)
         gvar = aggregate(node_gvar, "median", axis=0)
         sig.append(s6)
     scale2 = jnp.sqrt(jnp.maximum(gvar, 1e-12) + n * s2_eff ** 2) / jnp.sqrt(n)
@@ -321,8 +322,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     dir_norm = jnp.linalg.norm(dirs, axis=1)          # per machine (Thm 4.5(3))
     s3 = sb["R3 newton-dir"]
     s3_j = (s3 / lam_j) * dir_norm                     # per-machine sd
-    dirs_dp = dirs if cfg.noiseless else (
-        dirs + s3_j[:, None] * jax.random.normal(keys[6], dirs.shape, X.dtype))
+    dirs_dp = noise(keys[6], dirs, s3_j)           # per-machine (m+1,) sd
     dirs_dp = corrupt(dirs_dp, keys[7], 2)
     sig.append(s3)
 
@@ -342,8 +342,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     step = theta_os - theta_cq
     s4 = sb["R4 grad-diff"]
     s4_eff = s4 * jnp.linalg.norm(step)
-    gdiff_dp = gdiff if cfg.noiseless else (
-        gdiff + s4_eff * jax.random.normal(keys[8], gdiff.shape, X.dtype))
+    gdiff_dp = noise(keys[8], gdiff, s4_eff)
     gdiff_dp = corrupt(gdiff_dp, keys[9], 3)
     sig.append(s4)
 
@@ -374,8 +373,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
                      bcast=(theta_cq, v.s, v.y, v.rho, g_os))
     s5 = sb["R5 bfgs-dir"]
     s5_j = s5 * jnp.linalg.norm(h3, axis=1)
-    h3_dp = h3 if cfg.noiseless else (
-        h3 + s5_j[:, None] * jax.random.normal(keys[10], h3.shape, X.dtype))
+    h3_dp = noise(keys[10], h3, s5_j)              # per-machine (m+1,) sd
     h3_dp = corrupt(h3_dp, keys[11], 4)
     sig.append(s5)
 
@@ -403,11 +401,149 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
 
 def _agg_for(cfg: ProtocolConfig, name: str, values, scale):
     """Untrusted-center mode uses the median everywhere except the gradient
-    round (paper §4.3 keeps DCQ for 'crucial statistics such as gradients')."""
+    round (paper §4.3 keeps DCQ for 'crucial statistics such as gradients').
+
+    Routed through the pytree transport layer: flat arrays hit the
+    registry verbatim (byte parity), pytrees dispatch per leaf.
+    """
     if cfg.center_trust == "untrusted" and name not in ("grad",):
-        return aggregate(values, method="median", axis=0)
-    return aggregate(values, method=cfg.aggregator, scale=scale, K=cfg.K,
-                     trim_beta=cfg.trim_beta, axis=0)
+        return wire_aggregate(values, method="median")
+    return wire_aggregate(values, method=cfg.aggregator, scale=scale,
+                          K=cfg.K, trim_beta=cfg.trim_beta)
+
+
+# ---------------------------------------------- pytree (model-scale) engine
+
+class ProtocolTreeArrays(NamedTuple):
+    """Output of one pytree protocol step — arrays/pytrees only, a valid
+    jit output and scan carrier. ``mem`` is the updated per-machine L-BFGS
+    history the trainer threads into the next step."""
+    theta_cq: object         # robustly aggregated params after R1
+    theta_os: object         # one-stage params after R3
+    theta_qn: object         # final quasi-Newton params after R5
+    v_s: object              # curvature pair: s = theta_os - theta_cq
+    v_y: object              # y = aggregated grad-diff (R4)
+    mem: LBFGSMemory         # per-machine (s, y) history, machine axis first
+    losses: jnp.ndarray      # (m,) machine-local losses at the incoming theta
+    grad_norm: jnp.ndarray   # ||g_cq|| over the whole tree
+
+
+def protocol_tree_rounds(key: jax.Array, theta, batches, grad_fn,
+                         cfg: TreeProtocolConfig,
+                         mem: Optional[LBFGSMemory] = None,
+                         byz_mask: Optional[jnp.ndarray] = None,
+                         attack: str = "none", attack_factor=-3.0,
+                         sigmas=None, n: Optional[int] = None,
+                         machine_map=vmap_machines) -> ProtocolTreeArrays:
+    """Algorithm 1's five transmissions over an arbitrary parameter pytree
+    — one robust DP quasi-Newton training step for the model zoo.
+
+    The SAME wire primitives as the flat path (core/transport.py), so
+    every transmission is noised per leaf (per-leaf DP calibration),
+    corrupted through the ``repro.attacks`` registry, and aggregated per
+    leaf through ``repro.agg``. The round mapping from the convex head:
+
+      R1  machine-local SGD steps -> theta_j     -> agg -> theta_cq  (4.4)
+      R2  grad_j(theta_cq)                       -> agg -> g_cq      (4.6)
+      R3  per-machine L-BFGS dir on g_cq         -> agg -> H1;
+          theta_os = theta_cq - lr * H1                              (4.8)
+      R4  grad_j(theta_os) - grad_j(theta_cq)    -> agg -> y;
+          s = theta_os - theta_cq                                    (4.12)
+      R5  push (s, y_j^local) into machine memory; L-BFGS dir on
+          g_os = g_cq + y                        -> agg -> H2;
+          theta_qn = theta_os - lr * H2                              (4.15)
+
+    Machine-local curvature: each machine pushes its OWN raw grad-diff
+    (local data never leaves the machine un-noised) — the L-BFGS analog of
+    the paper's machine-side H_j^{-1}; the dense p x p update of the
+    convex head is replaced by the two-loop recursion over ``cfg.hist``
+    (s, y) pairs.
+
+    Pure and compile-once like ``protocol_rounds``: jit with ``grad_fn``,
+    ``cfg``, ``attack``, ``machine_map`` static; vmap over ``key`` for
+    replicates. ``batches``: pytree with leading machine axis m;
+    ``grad_fn(theta, batch) -> (loss, grad_tree)``. ``sigmas`` overrides
+    the per-leaf calibration ({transmission: sigma pytree},
+    dp.calibrate_tree_sigmas); otherwise it is computed here from
+    ``cfg.eps`` and ``n`` (samples per machine). ``cfg.eps <= 0`` runs
+    noiseless.
+    """
+    m = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    noiseless = cfg.eps <= 0.0
+    if sigmas is None and not noiseless:
+        if n is None:
+            raise ValueError("per-leaf DP calibration needs n (samples per "
+                             "machine) when sigmas are not supplied")
+        sigmas = dp.calibrate_tree_sigmas(theta, n, cfg.eps, cfg.delta,
+                                          cfg.gammas, cfg.tail)
+    if sigmas is None:
+        sigmas = {name: 0.0 for name in dp.TREE_TRANSMISSIONS}
+    if byz_mask is None:
+        byz_mask = jnp.zeros((m,), bool)
+    if mem is None:
+        mem = LBFGSMemory.init_like(cfg.hist, theta, machines=m)
+    # Same 16-way key layout as the flat path (indices 4/5 reserved for
+    # the untrusted-center variance round).
+    keys = jax.random.split(key, 16)
+
+    def tx(name, rnd, k_noise, k_corrupt, values):
+        vals = wire_noise(k_noise, values, sigmas[name], noiseless=noiseless)
+        vals = wire_corrupt(k_corrupt, vals, byz_mask, attack=attack,
+                            factor=attack_factor, round_idx=rnd)
+        return wire_aggregate(vals, method=cfg.aggregator, K=cfg.K,
+                              trim_beta=cfg.trim_beta)
+
+    # ---- R1: machine-local steps -> theta_cq --------------------------
+    def local_fit(batch):
+        def step(t, _):
+            loss, g = grad_fn(t, batch)
+            return tree_axpy(-cfg.local_lr, g, t), loss
+        t, losses = jax.lax.scan(step, theta, None, length=cfg.local_steps)
+        return t, losses[0]
+    theta_j, loss_j = machine_map(local_fit, batches)
+    theta_cq = tx("R1 theta", 0, keys[0], keys[1], theta_j)
+
+    # ---- R2: gradients at theta_cq -> g_cq ----------------------------
+    g_j = machine_map(lambda b, t: grad_fn(t, b)[1], batches,
+                      bcast=(theta_cq,))
+    g_cq = tx("R2 grad", 1, keys[2], keys[3], g_j)
+
+    # ---- R3: per-machine L-BFGS directions -> theta_os ----------------
+    dir_j = machine_map(
+        lambda mm, g: lbfgs_two_loop_tree(mm, g, gamma=lbfgs_gamma(mm)),
+        mem, bcast=(g_cq,))
+    H1 = tx("R3 newton-dir", 2, keys[6], keys[7], dir_j)
+    theta_os = tree_axpy(-cfg.lr, H1, theta_cq)
+    s_pair = tree_sub(theta_os, theta_cq)
+
+    # ---- R4: gradient differences -> y --------------------------------
+    y_j = machine_map(
+        lambda b, t_os, t_cq: tree_sub(grad_fn(t_os, b)[1],
+                                       grad_fn(t_cq, b)[1]),
+        batches, bcast=(theta_os, theta_cq))
+    y_cq = tx("R4 grad-diff", 3, keys[8], keys[9], y_j)
+
+    # ---- R5: curvature push + L-BFGS directions -> theta_qn -----------
+    def safe_push(mm, yj, s):
+        # skip non-curvature pairs (s.y <= 0 would break the two-loop
+        # positive-definiteness); each machine keeps its LOCAL pair.
+        ok = transport.tree_dot(s, yj) > 1e-10
+        pushed = mm.push(s, yj)
+        return jax.tree_util.tree_map(
+            lambda a, b: jnp.where(ok, a, b), pushed, mm)
+    mem = machine_map(safe_push, mem, y_j, bcast=(s_pair,))
+    g_os = tree_add(g_cq, y_cq)
+    dir2_j = machine_map(
+        lambda mm, g: lbfgs_two_loop_tree(mm, g, gamma=lbfgs_gamma(mm)),
+        mem, bcast=(g_os,))
+    H2 = tx("R5 bfgs-dir", 4, keys[10], keys[11], dir2_j)
+    theta_qn = tree_axpy(-cfg.lr, H2, theta_os)
+
+    return ProtocolTreeArrays(
+        theta_cq=theta_cq, theta_os=theta_os, theta_qn=theta_qn,
+        v_s=s_pair, v_y=y_cq, mem=mem, losses=loss_j,
+        grad_norm=jnp.sqrt(transport.tree_dot(g_cq, g_cq)).astype(
+            jnp.float32))
 
 
 # ------------------------------------------------------- the stateful shell

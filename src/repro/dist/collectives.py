@@ -29,6 +29,32 @@ from repro.compat import shard_map
 from repro.dist.grad_agg import GradAggConfig, aggregate_machine_axis
 
 
+def tree_machine_specs(tree, mesh: Mesh, fsdp: bool = False,
+                       machine_axis=None):
+    """Per-leaf PartitionSpecs for a machine-stacked pytree: the machine
+    axis rides the mesh's batch axes while every payload dim keeps the
+    PARAM sharding rule from models/sharding.py. (Dropping the payload
+    sharding replicates every machine's gradient over the model axis — a
+    16x memory/collective blow-up; see EXPERIMENTS.md §Perf HC-train it1.)
+
+    Extracted from train/trainer.py so the sharded tree protocol, the
+    trainer and the sweep executor route leaves over the mesh with the
+    same rule.
+    """
+    from repro.models import sharding as shd
+    ax = machine_axis if machine_axis is not None else shd.batch_axes(mesh)
+    if isinstance(ax, str) and ax not in mesh.axis_names:
+        # pure machine mesh (e.g. 1-D ("machines",)): no "data" axis
+        ax = mesh.axis_names[0]
+
+    def mspec(kp, leaf):
+        path = tuple(str(getattr(k, "key", getattr(k, "idx", "")))
+                     for k in kp)
+        ps = shd.param_spec(path, tuple(leaf.shape[1:]), mesh, fsdp=fsdp)
+        return P(*((ax,) + tuple(ps)))
+    return jax.tree_util.tree_map_with_path(mspec, tree)
+
+
 def sharded_aggregate_leaf(values: jax.Array, cfg: GradAggConfig,
                            mesh: Mesh, spec: P) -> jax.Array:
     """Aggregate one (m, ...) leaf whose machine axis is sharded.

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import agg, attacks
+from repro.core.transport import tree_leaf_dims, wire_noise
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,40 +45,70 @@ class GradAggConfig:
     strategy: str = "replicated"   # replicated | sharded (collectives.py)
     # None = auto: Pallas kernel on TPU, jnp reference elsewhere.
     use_pallas: Optional[bool] = None
+    # Per-leaf DP calibration (core.dp): with dp_eps > 0 the flat
+    # ``dp_sigma`` is ignored and every leaf's Gaussian mechanism is
+    # calibrated from ITS OWN dimension at budget (dp_eps, dp_delta),
+    # given ``dp_n`` samples per machine and tail constant ``dp_gamma``.
+    dp_eps: float = 0.0
+    dp_delta: float = 0.05
+    dp_gamma: float = 2.0
+    dp_n: int = 0                  # samples per machine (required if dp_eps>0)
+    dp_tail: str = "subexp"
 
 
-def add_dp_noise(grads: Any, sigma: float, key: jax.Array) -> Any:
+def add_dp_noise(grads: Any, sigma: Any, key: jax.Array) -> Any:
     """Gaussian mechanism per machine: every leaf row is an independent
-    draw (machines do not share randomness). ``sigma == 0`` is an exact
-    no-op — the inputs are returned unchanged."""
-    if sigma == 0.0:
+    draw (machines do not share randomness). ``sigma`` is a scalar (same
+    s.d. on every leaf) or a pytree matching ``grads`` (per-leaf
+    calibration, ``calibrate_leaf_sigmas``). A scalar ``sigma == 0`` is an
+    exact no-op — the inputs are returned unchanged.
+
+    Historical bug (fixed): this function applied one global sigma to
+    every leaf regardless of leaf dimension, so a 16-d bias leaf was
+    noised as if it were a 4096-d matrix leaf. Noise now routes through
+    the shared wire primitive with per-leaf scales.
+    """
+    if isinstance(sigma, (int, float)) and sigma == 0.0:
         return grads
-    leaves, treedef = jax.tree_util.tree_flatten(grads)
-    keys = jax.random.split(key, len(leaves))
-    noisy = [leaf + jnp.asarray(sigma, leaf.dtype)
-             * jax.random.normal(k, leaf.shape, leaf.dtype)
-             for leaf, k in zip(leaves, keys)]
-    return jax.tree_util.tree_unflatten(treedef, noisy)
+    return wire_noise(key, grads, sigma)
+
+
+def calibrate_leaf_sigmas(grads: Any, cfg: GradAggConfig) -> Any:
+    """Per-leaf Gaussian-mechanism s.d. from each leaf's OWN dimension:
+    the Lemma 4.4 mean mechanism (core.dp.tree_mean_sigma) at d_leaf,
+    budget (dp_eps, dp_delta). Leaves carry the machine axis first.
+    Returns a pytree of Python floats (static under jit)."""
+    from repro.core import dp
+    if cfg.dp_n <= 0:
+        raise ValueError("per-leaf DP calibration needs dp_n (samples per "
+                         f"machine) > 0, got {cfg.dp_n}")
+    dims = tree_leaf_dims(grads, machine_axis=True)
+    return dp.tree_mean_sigma(dims, cfg.dp_n, cfg.dp_gamma, cfg.dp_eps,
+                              cfg.dp_delta, cfg.dp_tail)
 
 
 def corrupt_machines(grads: Any, byz_mask: Optional[jnp.ndarray],
-                     cfg: GradAggConfig, key: jax.Array) -> Any:
+                     cfg: GradAggConfig, key: jax.Array,
+                     round_idx: Optional[int] = None) -> Any:
     """Apply the configured Byzantine attack to the machine rows selected
     by ``byz_mask`` on every leaf, dispatching through the
     ``repro.attacks`` registry (aliases like "sign"/"noise" resolve).
     ``mask=None``, an all-False mask, or ``attack="none"`` leave the
-    pytree unchanged. The training path transmits ONE message per step
-    (no round structure), so round-aware ramping attacks apply at
+    pytree unchanged. The default training path transmits ONE message per
+    step (no round structure), so round-aware ramping attacks apply at
     terminal (full) strength rather than silently degenerating to their
-    benign round-0 coefficient."""
+    benign round-0 coefficient; the five-round tree protocol passes its
+    actual transmission index via ``round_idx``."""
     attack = attacks.resolve(cfg.attack)
     if byz_mask is None or attack == "none":
         return grads
+    if round_idx is None:
+        round_idx = attacks.N_PROTOCOL_ROUNDS - 1
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     keys = jax.random.split(key, len(leaves))
     out = [attacks.apply_attack(leaf, byz_mask, attack=attack,
                                 factor=cfg.attack_factor, key=k,
-                                round_idx=attacks.N_PROTOCOL_ROUNDS - 1)
+                                round_idx=round_idx)
            for leaf, k in zip(leaves, keys)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -113,18 +144,24 @@ def aggregate_machine_axis(values: jnp.ndarray,
 
 def robust_aggregate(grads: Any, cfg: GradAggConfig, key: jax.Array,
                      byz_mask: Optional[jnp.ndarray] = None, *,
-                     mesh=None, machine_specs=None) -> Any:
+                     mesh=None, machine_specs=None,
+                     round_idx: Optional[int] = None) -> Any:
     """Attack -> DP noise -> robust aggregation over a gradient pytree.
 
-    Every leaf must carry the machine axis first. With
+    Every leaf must carry the machine axis first. With ``cfg.dp_eps > 0``
+    the noise s.d. is calibrated PER LEAF from each leaf's own dimension
+    (core.dp); otherwise the flat legacy ``cfg.dp_sigma`` applies. With
     ``cfg.strategy == "sharded"`` and a mesh + per-leaf PartitionSpecs
     (machine axis first), aggregation runs SPMD via
     ``collectives.sharded_aggregate_leaf``; otherwise each leaf is
     aggregated where it lives (GSPMD is free to all-gather).
     """
     k_attack, k_noise = jax.random.split(key)
-    grads = corrupt_machines(grads, byz_mask, cfg, k_attack)
-    grads = add_dp_noise(grads, cfg.dp_sigma, k_noise)
+    grads = corrupt_machines(grads, byz_mask, cfg, k_attack,
+                             round_idx=round_idx)
+    sigma = (calibrate_leaf_sigmas(grads, cfg) if cfg.dp_eps > 0
+             else cfg.dp_sigma)
+    grads = add_dp_noise(grads, sigma, k_noise)
     if cfg.strategy == "sharded" and mesh is not None \
             and machine_specs is not None:
         from repro.dist.collectives import sharded_aggregate_leaf
@@ -133,3 +170,17 @@ def robust_aggregate(grads: Any, cfg: GradAggConfig, key: jax.Array,
             grads, machine_specs)
     return jax.tree_util.tree_map(
         lambda g: aggregate_machine_axis(g, cfg), grads)
+
+
+def transmit_tree(values: Any, cfg: GradAggConfig, key: jax.Array,
+                  byz_mask: Optional[jnp.ndarray] = None, *,
+                  round_idx: int = 0, mesh=None,
+                  machine_specs=None) -> Any:
+    """One wire transmission of the five-round tree protocol: corrupt ->
+    per-leaf DP noise -> per-leaf robust aggregation, with the actual
+    transmission index forwarded to round-aware attacks. Thin named
+    wrapper over :func:`robust_aggregate` so the sharded protocol and the
+    trainer share one transport entry point."""
+    return robust_aggregate(values, cfg, key, byz_mask, mesh=mesh,
+                            machine_specs=machine_specs,
+                            round_idx=round_idx)

@@ -34,9 +34,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.configs.base import ProtocolConfig
+from repro.configs.base import ProtocolConfig, TreeProtocolConfig
 from repro.core.losses import MEstimationProblem
-from repro.core.protocol import DPQNProtocol, ProtocolResult
+from repro.core.protocol import (DPQNProtocol, ProtocolResult,
+                                 ProtocolTreeArrays, protocol_tree_rounds)
 
 
 def machine_map(mesh: Mesh, axis: str = "machines"):
@@ -90,3 +91,43 @@ def run_sharded(prob: MEstimationProblem, cfg: ProtocolConfig, mesh: Mesh,
                                     theta0=theta0)
     return {"theta_cq": res.theta_cq, "theta_os": res.theta_os,
             "theta_qn": res.theta_qn, "result": res}
+
+
+def run_sharded_tree(key: jax.Array, theta, batches, grad_fn,
+                     cfg: TreeProtocolConfig, mesh: Mesh, mem=None,
+                     byz_mask: Optional[jnp.ndarray] = None,
+                     attack: str = "none", attack_factor: float = -3.0,
+                     n: Optional[int] = None,
+                     jit: bool = True) -> ProtocolTreeArrays:
+    """The pytree protocol with machines sharded over ``mesh``'s first
+    axis: each device holds its machines' batch shard (raw data never
+    moves), the five per-machine statistics rounds run one shard per
+    device through the same ``machine_map``, and every leaf of every
+    transmission is aggregated by the same central code as the
+    single-host engine. ``shard_map``'s spec prefixes broadcast
+    ``P(axis)`` over pytree machine args, so parameter trees and the
+    per-machine L-BFGS memory shard without per-leaf plumbing.
+
+    ``batches``: pytree with leading machine axis m (must divide the mesh
+    axis evenly). The other arguments are ``protocol_tree_rounds``'s.
+    """
+    axis = mesh.axis_names[0]
+    n_dev = mesh.shape[axis]
+    m = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    if m % n_dev:
+        raise ValueError(
+            f"{m} machines do not shard evenly over {n_dev} devices on "
+            f"axis {axis!r}")
+    machine_sharding = NamedSharding(mesh, P(axis))
+    batches = jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, machine_sharding), batches)
+    mmap = machine_map(mesh, axis)
+
+    def run(key, theta, batches, mem, byz_mask):
+        return protocol_tree_rounds(
+            key, theta, batches, grad_fn, cfg, mem=mem, byz_mask=byz_mask,
+            attack=attack, attack_factor=attack_factor, n=n,
+            machine_map=mmap)
+    if jit:
+        run = jax.jit(run)
+    return run(key, theta, batches, mem, byz_mask)

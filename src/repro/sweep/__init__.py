@@ -11,18 +11,21 @@ CLI: ``python -m repro.sweep --preset smoke`` (see repro/sweep/cli.py).
 from repro.sweep.artifact import (SCHEMA_VERSION, load, rows, save, to_csv,
                                   validate)
 from repro.sweep.executor import SweepExecutor, run_scenarios
-from repro.sweep.grid import (Scenario, ScenarioGrid, group_label,
-                              group_scenarios, scenario_from_json)
+from repro.sweep.grid import (Scenario, ScenarioGrid, TrainScenario,
+                              group_label, group_scenarios,
+                              scenario_from_json)
 from repro.sweep.presets import (PRESETS, attack_sensitivity_scenarios,
                                  build_preset, fast_variant,
                                  fig_eps_reference, fig_eps_scenarios,
                                  fig_m_scenarios, smoke_scenarios,
-                                 table1_scenarios, untrusted_scenarios)
+                                 table1_scenarios, untrusted_scenarios,
+                                 zoo_smoke_scenarios)
 
 __all__ = ["SCHEMA_VERSION", "load", "rows", "save", "to_csv", "validate",
            "SweepExecutor", "run_scenarios",
-           "Scenario", "ScenarioGrid", "group_label", "group_scenarios",
-           "scenario_from_json",
+           "Scenario", "ScenarioGrid", "TrainScenario", "group_label",
+           "group_scenarios", "scenario_from_json",
+           "zoo_smoke_scenarios",
            "PRESETS", "attack_sensitivity_scenarios", "build_preset",
            "fast_variant", "fig_eps_reference", "fig_eps_scenarios",
            "fig_m_scenarios", "smoke_scenarios", "table1_scenarios",

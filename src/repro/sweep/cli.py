@@ -34,7 +34,8 @@ def _summarize(art) -> str:
     lines.append("-" * len(header))
     for sid, rec in art["scenarios"].items():
         for name, val in sorted(rec["metrics"].items()):
-            lines.append(f"{sid:<58} {name:>10} {val:9.4f}")
+            if isinstance(val, (int, float)):   # skip e.g. loss curves
+                lines.append(f"{sid:<58} {name:>10} {val:9.4f}")
     return "\n".join(lines)
 
 

@@ -41,7 +41,8 @@ from repro.sweep import artifact as artifact_mod
 from repro.sweep.comm import comm_record
 from repro.sweep.data import (build_data, byz_mask, compute_metrics,
                               replicate_keys)
-from repro.sweep.grid import Scenario, group_label, group_scenarios
+from repro.sweep.grid import (Scenario, TrainScenario, group_label,
+                              group_scenarios)
 
 
 class SweepExecutor:
@@ -95,6 +96,114 @@ class SweepExecutor:
         engine = jax.jit(over_scenarios)
         self._engines[gkey] = engine
         return engine
+
+    def _train_engine(self, scenario: TrainScenario):
+        """One compiled protocol train STEP per zoo group: eps rides as
+        traced per-leaf sigma trees, byz_frac as the mask, attack_factor
+        as a traced scalar and the PRNG key per step — every scenario in
+        the group (and every step of every scenario) reuses the single
+        executable, extending the compile-once contract to training."""
+        gkey = scenario.group_key()
+        if gkey in self._engines:
+            return self._engines[gkey]
+        from repro.configs import get_config
+        from repro.core.protocol import protocol_tree_rounds
+        from repro.models.model import Model
+        cfg = get_config(scenario.arch, reduced=True)
+        model = Model(cfg, remat=True)
+        tcfg = scenario.protocol_config()
+        attack = scenario.attack
+        mmap = self._mmap
+        self.trace_counts[gkey] = 0
+
+        def grad_fn(params, mb):
+            (loss, _), g = jax.value_and_grad(
+                model.loss, has_aux=True)(params, mb)
+            return loss, g
+
+        def step(key, params, mem, mb, mask, factor, sigmas):
+            self.trace_counts[gkey] += 1
+            return protocol_tree_rounds(
+                key, params, mb, grad_fn, tcfg, mem=mem, byz_mask=mask,
+                attack=attack, attack_factor=factor, sigmas=sigmas,
+                machine_map=mmap)
+
+        engine = (jax.jit(step), model, cfg)
+        self._engines[gkey] = engine
+        return engine
+
+    def _run_train_group(self, gkey, scens: List[TrainScenario],
+                         label: str) -> List[Dict]:
+        """Run one zoo jit group scenario-by-scenario through its shared
+        compiled step; returns one artifact record per scenario."""
+        from repro.core import dp
+        from repro.core.bfgs import LBFGSMemory
+        from repro.core.transport import tree_size
+        from repro.data.lm import make_batch
+        from repro.train.trainer import _split_machines
+        step_fn, model, cfg = self._train_engine(scens[0])
+        records = []
+        for s in scens:
+            m = s.machines
+            params = model.init(jax.random.PRNGKey(s.seed))
+            mem = LBFGSMemory.init_like(s.hist, params, machines=m)
+            mask = jnp.arange(m) < s.n_byzantine()
+            if s.eps > 0:
+                sigmas = jax.tree_util.tree_map(
+                    lambda v: jnp.float32(v),
+                    dp.calibrate_tree_sigmas(
+                        params, s.n_per_machine(), s.eps, s.delta,
+                        (s.gamma,) * 5, s.tail))
+            else:
+                sigmas = {name: jnp.float32(0.0)
+                          for name in dp.TREE_TRANSMISSIONS}
+            key = jax.random.PRNGKey(1000 + s.seed)
+            data_key = jax.random.PRNGKey(s.seed + 1)
+            t0 = time.perf_counter()
+            losses, gnorm = [], 0.0
+            for i in range(s.steps):
+                batch = make_batch(jax.random.fold_in(data_key, i), cfg,
+                                   s.batch, s.seq)
+                mb = _split_machines(batch, m)
+                if self.mesh is not None:
+                    from jax.sharding import NamedSharding
+                    from jax.sharding import PartitionSpec as P
+                    sharding = NamedSharding(
+                        self.mesh, P(self.mesh.axis_names[0]))
+                    mb = jax.tree_util.tree_map(
+                        lambda x: jax.device_put(x, sharding), mb)
+                key, sub = jax.random.split(key)
+                out = step_fn(sub, params, mem, mb, mask,
+                              jnp.float32(s.attack_factor), sigmas)
+                params, mem = out.theta_qn, out.mem
+                losses.append(float(out.losses.mean()))
+                gnorm = float(out.grad_norm)
+            dt = time.perf_counter() - t0
+            p_total = tree_size(params)
+            records.append({
+                "scenario": s.to_json(),
+                "metrics": {"loss_first": losses[0],
+                            "loss_last": losses[-1],
+                            "loss_drop": losses[0] - losses[-1],
+                            "losses": losses,
+                            "grad_norm_last": gnorm},
+                "spend": _train_spend_record(s, params),
+                "comm": {"n_transmissions": len(dp.TREE_TRANSMISSIONS),
+                         "bytes_per_round": 4 * p_total,
+                         "bytes_per_machine":
+                             4 * p_total * len(dp.TREE_TRANSMISSIONS),
+                         "n_params": p_total,
+                         "eps_per_round":
+                             s.eps / len(dp.TREE_TRANSMISSIONS),
+                         "delta_per_round":
+                             s.delta / len(dp.TREE_TRANSMISSIONS)},
+                "thetas_qn": None,
+                "timing": {"group": label,
+                           "group_seconds": dt, "group_size": len(scens),
+                           "steps": s.steps,
+                           "traces": self.trace_counts[s.group_key()]},
+            })
+        return records
 
     # ------------------------------------------------------------- batching
 
@@ -171,6 +280,17 @@ class SweepExecutor:
         groups = group_scenarios(pending)
         for gi, (gkey, scens) in enumerate(groups.items()):
             label = group_label(gkey)
+            if gkey[0] == "zoo":
+                self.progress(f"[group {gi + 1}/{len(groups)}] {label}: "
+                              f"{len(scens)} training run(s) x "
+                              f"{scens[0].steps} step(s)")
+                for s, record in zip(scens,
+                                     self._run_train_group(gkey, scens,
+                                                           label)):
+                    art["scenarios"][s.scenario_id()] = record
+                if artifact_path:
+                    artifact_mod.save(art, artifact_path)
+                continue
             chunks = self._chunks(scens)
             tag = (f" in {len(chunks)} chunk(s) of <= {self.chunk_size}"
                    if len(chunks) > 1 else "")
@@ -253,6 +373,28 @@ def _spend_record(s: Scenario, sigmas: np.ndarray) -> Dict:
             "n_transmissions": k, "eps_per_round": s.eps / k,
             "delta_per_round": s.delta / k,
             "sigmas": [float(v) for v in sigmas]}
+
+
+def _train_spend_record(s: TrainScenario, params) -> Dict:
+    """Per-STEP spend for one zoo training run, with the per-leaf ledger:
+    every transmission's sigma at every leaf's own dimension (the per-leaf
+    calibration made auditable, core.dp.tree_spend_ledger)."""
+    from repro.core import dp
+    k = len(dp.TREE_TRANSMISSIONS)
+    if s.eps <= 0:
+        return {"eps_total": 0.0, "delta_total": 0.0, "n_transmissions": k,
+                "eps_per_round": 0.0, "delta_per_round": 0.0,
+                "sigmas": [0.0] * k, "per_leaf": []}
+    ledger = dp.tree_spend_ledger(params, s.n_per_machine(), s.eps,
+                                  s.delta, (s.gamma,) * 5, s.tail)
+    sig_max = {name: max(r["sigma"] for r in ledger
+                         if r["transmission"] == name)
+               for name in dp.TREE_TRANSMISSIONS}
+    return {"eps_total": s.eps, "delta_total": s.delta,
+            "n_transmissions": k, "eps_per_round": s.eps / k,
+            "delta_per_round": s.delta / k,
+            "sigmas": [sig_max[name] for name in dp.TREE_TRANSMISSIONS],
+            "per_leaf": ledger}
 
 
 def _run_meta(meta: Optional[Dict]) -> Dict:

@@ -23,7 +23,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 from repro.agg import registered as registered_aggregators
 from repro.attacks import registered as registered_attacks
 from repro.attacks import resolve as resolve_attack
-from repro.configs.base import ProtocolConfig
+from repro.configs.base import ProtocolConfig, TreeProtocolConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,12 +133,116 @@ class Scenario:
         return d
 
 
-def scenario_from_json(d: Dict) -> Scenario:
+def scenario_from_json(d: Dict) -> "Scenario | TrainScenario":
     kw = dict(d)
+    if kw.pop("kind", None) == "train":
+        return TrainScenario(**kw)
     for key in ("gammas", "rep_seeds", "pair"):
         if kw.get(key) is not None:
             kw[key] = tuple(kw[key])
     return Scenario(**kw)
+
+
+# ------------------------------------------------- model-zoo training points
+
+@dataclasses.dataclass(frozen=True)
+class TrainScenario:
+    """One robust-DP quasi-Newton TRAINING run of a model-zoo config: the
+    same five-transmission engine as :class:`Scenario`'s convex protocol
+    (core.protocol.protocol_tree_rounds), driven for ``steps`` optimizer
+    steps over the arch's parameter pytree.
+
+    jit-static (group key — one compiled train step per group):
+        arch, steps, batch, seq, machines, aggregator, attack, hist,
+        lr, local_lr, local_steps, tail, K, trim_beta, noiseless
+    dynamic (fed as traced args to the shared step):
+        eps/delta (as host-calibrated per-leaf sigma trees), byz_frac
+        (as the mask), attack_factor, seed (PRNG key)
+    """
+    arch: str = "xlstm-125m"           # repro.configs zoo name
+    steps: int = 3                     # optimizer steps (= protocol runs)
+    batch: int = 8                     # global batch, split over machines
+    seq: int = 16
+    machines: int = 4
+    eps: float = 0.0                   # per-step budget; <= 0 = noiseless
+    delta: float = 0.05
+    byz_frac: float = 0.0
+    attack: str = "none"
+    attack_factor: float = -3.0
+    aggregator: str = "dcq_mad"        # repro.agg registry name
+    hist: int = 5                      # L-BFGS memory length
+    lr: float = 0.3
+    local_lr: float = 0.1
+    local_steps: int = 1
+    gamma: float = 2.0
+    tail: str = "subexp"
+    K: int = 10
+    trim_beta: float = 0.2
+    seed: int = 0
+
+    def __post_init__(self):
+        from repro.configs import ARCHS
+        if self.arch not in ARCHS:
+            raise ValueError(f"unknown arch {self.arch!r}; available: "
+                             f"{ARCHS}")
+        if self.batch % self.machines:
+            raise ValueError(f"batch {self.batch} does not split over "
+                             f"{self.machines} machines")
+        if self.aggregator not in registered_aggregators():
+            raise ValueError(
+                f"unknown aggregator {self.aggregator!r}; registered: "
+                f"{registered_aggregators()}")
+        object.__setattr__(self, "attack", resolve_attack(self.attack))
+        if self.attack not in registered_attacks():
+            raise ValueError(
+                f"unknown attack {self.attack!r}; registered: "
+                f"{registered_attacks()}")
+
+    # ------------------------------------------------------------- identity
+
+    def canonical(self) -> Tuple:
+        return tuple(sorted(
+            (f.name, repr(getattr(self, f.name)))
+            for f in dataclasses.fields(self)))
+
+    def scenario_id(self) -> str:
+        h = hashlib.sha1(repr(self.canonical()).encode()).hexdigest()[:8]
+        return (f"zoo-{self.arch}-t{self.steps}-b{self.batch}"
+                f"-s{self.seq}-m{self.machines}-eps{self.eps:g}"
+                f"-byz{self.byz_frac:g}-{self.attack}-{self.aggregator}"
+                f"-{h}")
+
+    def group_key(self) -> Tuple:
+        """Leads with "zoo" so mixed sweeps bucket train and protocol
+        scenarios apart; eps rides as sigma trees, byz_frac as the mask
+        and attack_factor as a traced scalar, so they stay dynamic."""
+        return ("zoo", self.arch, self.steps, self.batch, self.seq,
+                self.machines, self.aggregator, self.attack, self.hist,
+                self.lr, self.local_lr, self.local_steps, self.tail,
+                self.K, self.trim_beta, self.eps <= 0.0)
+
+    def protocol_config(self) -> TreeProtocolConfig:
+        """Static per-group config. eps is reduced to the NOISELESS FLAG
+        (the executor feeds each scenario's actual budget as traced
+        per-leaf sigma trees, so budgets share one trace)."""
+        return TreeProtocolConfig(
+            hist=self.hist, lr=self.lr, local_lr=self.local_lr,
+            local_steps=self.local_steps,
+            eps=1.0 if self.eps > 0 else 0.0, delta=self.delta,
+            gammas=(self.gamma,) * 5, tail=self.tail,
+            aggregator=self.aggregator, K=self.K,
+            trim_beta=self.trim_beta)
+
+    def n_byzantine(self) -> int:
+        return int(self.byz_frac * self.machines)
+
+    def n_per_machine(self) -> int:
+        return self.batch // self.machines
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["kind"] = "train"
+        return d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -213,6 +317,13 @@ def group_scenarios(scenarios: Iterable[Scenario]
 
 def group_label(key: Tuple) -> str:
     """Short human-readable tag for a jit group (artifact/timing records)."""
+    if key[0] == "zoo":
+        _, arch, steps, batch, seq, machines, agg, attack = key[:8]
+        tag = (f"zoo-{arch}-t{steps}-b{batch}-s{seq}-m{machines}"
+               f"-{attack}-{agg}")
+        if key[-1]:
+            tag += "-noiseless"
+        return tag
     problem, m, n, p, reps, attack, agg, trust = key[:8]
     noiseless = key[-1]
     tag = f"{problem}-m{m}-n{n}-p{p}-r{reps}-{attack}-{agg}-{trust}"

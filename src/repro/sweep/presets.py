@@ -6,6 +6,9 @@ Builders are parameterized so the figure benchmarks stay thin wrappers
 
   smoke      2 losses x 2 attacks x 2 aggregators x 2 eps, plus one
              registry-path group (alie x dcq) — CI gate, <5 min CPU
+  zoo-smoke  model-zoo TRAINING smoke: short robust-DP quasi-Newton runs
+             (the same five-transmission engine) on one reduced config
+             per family + a clean-mean baseline + a two-budget DP group
   fig-eps    Figures 1/2/4/5: MRSE vs eps, normal + 10% Byzantine
   fig-m      Figures 3/6:     MRSE vs machine count m
   table1     Table 1 stand-in: digit-pair accuracy vs eps (+ Byzantine)
@@ -30,7 +33,7 @@ from typing import Dict, List, Tuple
 from repro.agg import registered as registered_aggregators
 from repro.attacks import get_attack
 from repro.attacks import registered as registered_attacks
-from repro.sweep.grid import Scenario, ScenarioGrid
+from repro.sweep.grid import Scenario, ScenarioGrid, TrainScenario
 
 #: Figure 1-3 default privacy budgets (paper §5.1)
 EPS_GRID = (4.0, 10.0, 20.0, 30.0, 50.0)
@@ -64,6 +67,37 @@ def smoke_scenarios() -> List[Scenario]:
         m_grid=(7,), byz_fracs=(0.15,),
         n=200, p=5, reps=2)
     return grid.expand() + alie.expand()
+
+
+# --------------------------------------------------------------- zoo-smoke
+
+#: one reduced config per model family the protocol engine must drive
+#: (ssm/xlstm, dense, MoE, hybrid mamba+attn)
+ZOO_SMOKE_ARCHS: Tuple[str, ...] = (
+    "xlstm-125m", "glm4-9b", "qwen3-moe-30b-a3b", "zamba2-7b")
+
+
+def zoo_smoke_scenarios() -> List[Scenario]:
+    """Model-zoo training smoke: the SAME five-transmission engine that
+    produces the convex figures drives short robust QN training runs on
+    one reduced config per family, plus (on xlstm) a clean-mean baseline
+    and a two-budget DP group. eps rides the group's dynamic sigma axis,
+    so the two DP budgets share one compiled step (compile-once extends
+    to training; asserted in tests/test_protocol_pytree.py)."""
+    common = dict(steps=2, batch=8, seq=16, machines=4, lr=0.3)
+    out: List[Scenario] = [
+        TrainScenario(arch=arch, aggregator="dcq_mad", attack="signflip",
+                      byz_frac=0.25, **common)
+        for arch in ZOO_SMOKE_ARCHS]
+    # clean mean baseline (the degenerate no-defense configuration)
+    out.append(TrainScenario(arch="xlstm-125m", aggregator="mean",
+                             **common))
+    # two per-step budgets through ONE compiled step (dynamic sigma trees)
+    out += [TrainScenario(arch="xlstm-125m", aggregator="dcq_mad",
+                          attack="signflip", byz_frac=0.25, eps=eps,
+                          **common)
+            for eps in (5.0, 50.0)]
+    return out
 
 
 # ------------------------------------------------- Figures 1/2/4/5 (vs eps)
@@ -223,8 +257,13 @@ def _build_paper() -> List[Scenario]:
     return _build_fig_eps() + _build_fig_m() + _build_table1()
 
 
+def _build_zoo_smoke() -> List[Scenario]:
+    return zoo_smoke_scenarios()
+
+
 PRESETS = {
     "smoke": _build_smoke,
+    "zoo-smoke": _build_zoo_smoke,
     "fig-eps": _build_fig_eps,
     "fig-m": _build_fig_m,
     "table1": _build_table1,
@@ -243,9 +282,13 @@ def build_preset(name: str) -> List[Scenario]:
 
 def fast_variant(scenarios: List[Scenario], reps: int = 2) -> List[Scenario]:
     """Reduced-replicate copy of a preset (CI smoke of the full figures).
-    Explicit rep_seeds are truncated to keep per-key reproducibility."""
+    Explicit rep_seeds are truncated to keep per-key reproducibility;
+    training scenarios are cut to ``reps`` steps instead."""
     out = []
     for s in scenarios:
+        if isinstance(s, TrainScenario):
+            out.append(dataclasses.replace(s, steps=min(reps, s.steps)))
+            continue
         r = min(reps, s.reps)
         seeds = s.rep_seeds[:r] if s.rep_seeds is not None else None
         out.append(dataclasses.replace(s, reps=r, rep_seeds=seeds))

@@ -19,10 +19,12 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
+from repro.configs.base import TreeProtocolConfig
+from repro.core.protocol import protocol_tree_rounds
+from repro.dist.collectives import tree_machine_specs
 from repro.dist.grad_agg import GradAggConfig, robust_aggregate
-from repro.models import sharding as shd
 from repro.models.model import Model
 from repro.train.optimizer import AdamW, apply_updates, global_norm
 
@@ -91,18 +93,10 @@ def make_train_step(model: Model, opt: AdamW, tcfg: TrainConfig,
         machine_specs = None
         if mesh is not None:
             # machine axis on pod x data; payload dims keep the PARAM
-            # sharding (dropping it replicates every machine's grad over
-            # the model axis — a 16x memory/collective blow-up, found and
-            # fixed in EXPERIMENTS.md §Perf HC-train it1).
-            ax = shd.batch_axes(mesh)
-
-            def mspec(kp, g):
-                path = tuple(str(getattr(k, "key", getattr(k, "idx", "")))
-                             for k in kp)
-                ps = shd.param_spec(path, tuple(g.shape[1:]), mesh,
-                                    fsdp=tcfg.fsdp)
-                return P(*((ax,) + tuple(ps)))
-            machine_specs = jax.tree_util.tree_map_with_path(mspec, grads)
+            # sharding (collectives.tree_machine_specs — dropping it
+            # replicates every machine's grad over the model axis, a 16x
+            # blow-up; EXPERIMENTS.md §Perf HC-train it1).
+            machine_specs = tree_machine_specs(grads, mesh, fsdp=tcfg.fsdp)
             grads = jax.lax.with_sharding_constraint(
                 grads, jax.tree_util.tree_map(
                     lambda s: NamedSharding(mesh, s), machine_specs))
@@ -118,6 +112,92 @@ def make_train_step(model: Model, opt: AdamW, tcfg: TrainConfig,
         return params, opt_state, metrics
 
     return train_step
+
+
+# ---------------------------------------------- quasi-Newton (protocol)
+
+@dataclasses.dataclass(frozen=True)
+class QNTrainConfig:
+    """Robust DP quasi-Newton training: every optimizer step IS one run of
+    Algorithm 1's five transmissions over the parameter pytree."""
+    n_machines: int = 4
+    protocol: TreeProtocolConfig = TreeProtocolConfig()
+    attack: str = "none"           # repro.attacks registry name/alias
+    attack_factor: float = -3.0
+    remat: bool = True
+
+
+def make_qn_train_step(model: Model, qcfg: QNTrainConfig,
+                       mesh: Optional[Mesh] = None):
+    """Returns train_step(params, mem, batch, key, byz_mask) ->
+    (params, mem, metrics): one five-transmission protocol step
+    (core.protocol.protocol_tree_rounds). The curvature state ``mem`` is
+    the per-machine L-BFGS history from the SHARED core/bfgs.py
+    implementation — the same two-loop the convex head uses, not a
+    reimplementation — threaded through successive steps.
+
+    ``n`` for the per-leaf DP calibration is the per-machine batch size
+    (each batch row is one sample draw from the machine's shard).
+    """
+    loss_fn = make_loss_fn(model, qcfg.remat)
+    m = qcfg.n_machines
+
+    def grad_fn(params, mb):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        return loss, grads
+
+    def train_step(params, mem, batch, key,
+                   byz_mask: Optional[jnp.ndarray] = None):
+        mb = _split_machines(batch, m)
+        n = jax.tree_util.tree_leaves(mb)[0].shape[1]
+        if mesh is not None:
+            # machine axis over the mesh's batch axes, payload dims on the
+            # param rules — GSPMD propagates these through all five rounds
+            specs = tree_machine_specs(mb, mesh)
+            mb = jax.lax.with_sharding_constraint(
+                mb, jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), specs))
+        out = protocol_tree_rounds(
+            key, params, mb, grad_fn, qcfg.protocol, mem=mem,
+            byz_mask=byz_mask, attack=qcfg.attack,
+            attack_factor=qcfg.attack_factor, n=n)
+        metrics = {"loss": out.losses.mean(),
+                   "loss_per_machine": out.losses,
+                   "grad_norm": out.grad_norm}
+        return out.theta_qn, out.mem, metrics
+
+    return train_step
+
+
+class QNTrainer:
+    """Protocol-driven loop: the model zoo trained by the SAME engine as
+    the p=10 convex head — five DP transmissions, registry attacks and
+    aggregators, per-leaf calibrated noise, L-BFGS curvature memory."""
+
+    def __init__(self, model: Model, qcfg: QNTrainConfig,
+                 mesh: Optional[Mesh] = None):
+        self.model, self.qcfg = model, qcfg
+        self.step_fn = jax.jit(make_qn_train_step(model, qcfg, mesh))
+
+    def init_memory(self, params):
+        from repro.core.bfgs import LBFGSMemory
+        return LBFGSMemory.init_like(self.qcfg.protocol.hist, params,
+                                     machines=self.qcfg.n_machines)
+
+    def fit(self, params, batches, key, byz_mask=None, log_every: int = 10,
+            callback=None):
+        mem = self.init_memory(params)
+        history = []
+        for i, batch in enumerate(batches):
+            key, sub = jax.random.split(key)
+            params, mem, metrics = self.step_fn(
+                params, mem, batch, sub, byz_mask)
+            if i % log_every == 0 or callback:
+                history.append({"step": i, "loss": float(metrics["loss"])})
+                if callback:
+                    callback(i, metrics)
+        return params, mem, history
 
 
 class Trainer:
