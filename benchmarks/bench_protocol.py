@@ -22,6 +22,7 @@ import jax
 
 from repro.configs.base import ProtocolConfig
 from repro.core import DPQNProtocol, get_problem
+from repro.core.keys import stream_key
 from repro.data.synthetic import make_shards
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -33,7 +34,7 @@ def measure(reps: int = 20, m: int = 50, n: int = 1000, p: int = 10,
     X, y = make_shards(jax.random.PRNGKey(seed), "logistic", m, n, p)
     prob = get_problem("logistic")
     cfg = ProtocolConfig(eps=eps, delta=0.05)
-    keys = jax.random.split(jax.random.PRNGKey(seed + 1), reps)
+    keys = jax.random.split(stream_key(seed, "protocol"), reps)
 
     # eager baseline: the pre-refactor execution model — one Python-driven
     # per-op pipeline per replicate, no compilation, host sync every round
@@ -49,6 +50,9 @@ def measure(reps: int = 20, m: int = 50, n: int = 1000, p: int = 10,
     jax.block_until_ready(proto.run_monte_carlo(keys, X, y))
     t_first = time.perf_counter() - t0           # includes compilation
     t0 = time.perf_counter()
+    # repro: allow(key-reuse) — deliberate: the SAME replicate batch is
+    # re-run to time the steady state (identical computation, cache hit);
+    # the draws are timing fodder, not statistics.
     jax.block_until_ready(proto.run_monte_carlo(keys, X, y))
     t_steady = time.perf_counter() - t0
 

@@ -1,3 +1,6 @@
+# repro: allow-file(wire-boundary) — kernel benchmark: comparing the raw
+# registry backends (reference vs Pallas) against each other IS the job;
+# the wire would hide exactly the dispatch being measured.
 """Kernel micro-benchmarks: jnp oracle vs Pallas(interpret) correctness at
 bench shapes + HLO-derived arithmetic-intensity notes for the TPU target,
 plus the BATCHED-AGGREGATION benchmark that gates the sweep hot path.

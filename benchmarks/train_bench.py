@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import TreeProtocolConfig
+from repro.core.keys import stream_key
 from repro.data.lm import make_batch
 from repro.models.model import Model
 from repro.train.trainer import QNTrainConfig, make_qn_train_step
@@ -57,20 +58,21 @@ def measure(arch: str = "xlstm-125m", steps: int = 4, batch: int = 8,
     from repro.core.bfgs import LBFGSMemory
     mem = LBFGSMemory.init_like(hist, params, machines=machines)
     byz = jnp.arange(machines) < 1
-    key = jax.random.PRNGKey(seed + 1)
-    batches = [make_batch(jax.random.fold_in(key, i), cfg, batch, seq)
+    data_key = stream_key(seed, "data")
+    batches = [make_batch(jax.random.fold_in(data_key, i), cfg, batch, seq)
                for i in range(steps)]
+    step_key = stream_key(seed, "protocol")
 
     t0 = time.perf_counter()
     params, mem, metrics = step_fn(params, mem, batches[0],
-                                   jax.random.fold_in(key, 1000), byz)
+                                   jax.random.fold_in(step_key, 0), byz)
     jax.block_until_ready(params)
     t_cold = time.perf_counter() - t0            # includes compilation
 
     t0 = time.perf_counter()
     for i in range(1, steps):
         params, mem, metrics = step_fn(params, mem, batches[i],
-                                       jax.random.fold_in(key, 1000 + i),
+                                       jax.random.fold_in(step_key, i),
                                        byz)
     jax.block_until_ready(params)
     t_steady = (time.perf_counter() - t0) / max(1, steps - 1)

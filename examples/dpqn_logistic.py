@@ -59,8 +59,12 @@ def main(argv=None):
         cfg = ProtocolConfig(eps=float(eps), delta=0.05)
         met = art["scenarios"][scens[(eps, False)].scenario_id()]["metrics"]
         met_b = art["scenarios"][scens[(eps, True)].scenario_id()]["metrics"]
+        # repro: allow(key-reuse) — historical baseline replicate schedule:
+        # the EXPERIMENTS.md comparison table was recorded under these
+        # exact keys; reps stay < the 100-seed offset gap.
         newt = [newton_estimator(prob, cfg, jax.random.PRNGKey(300 + r),
                                  X, y).theta for r in range(args.reps)]
+        # repro: allow(key-reuse) — same recorded schedule as above.
         gd = [gd_estimator(prob, cfg, jax.random.PRNGKey(400 + r), X, y,
                            rounds=20, lr=2.0).theta
               for r in range(args.reps)]

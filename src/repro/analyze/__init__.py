@@ -1,0 +1,28 @@
+"""repro.analyze: privacy- and trace-safety static analysis.
+
+The paper's DP guarantee rests on invariants the type system cannot see:
+every one of Algorithm 1's five transmissions gets *independently keyed*,
+per-dimension-calibrated Gaussian noise, and every noise injection is
+matched by a spend-ledger record. After the PR 4-6 refactors those
+invariants live as conventions — transport.py is the only wire, PRNG keys
+are never consumed twice, ``protocol_rounds`` stays host-sync-free. This
+package is their compiler:
+
+  * ``registry``  — one :class:`Rule` entry per invariant, mirroring the
+    ``repro.agg`` / ``repro.attacks`` registry style;
+  * ``callgraph`` — the shared AST walker: module parsing, name
+    resolution, call-graph edges and jit-reachability (functions reachable
+    from ``jax.jit`` / ``shard_map`` / ``pallas_call`` roots);
+  * ``rules``     — the shipped rules: key-reuse, wire-boundary,
+    ledger-pairing, jit-purity, pallas-static;
+  * ``engine``    — orchestration, inline suppressions
+    (``# repro: allow(<rule>) — <reason>``), human + JSON reports;
+  * ``cli``       — ``python -m repro.analyze`` / ``repro-analyze``,
+    the CI gate.
+"""
+from repro.analyze.engine import Report, analyze_paths
+from repro.analyze.registry import (Finding, Rule, get_rule, register,
+                                    registered, unregister)
+
+__all__ = ["analyze_paths", "Report", "Finding", "Rule", "register",
+           "unregister", "get_rule", "registered"]

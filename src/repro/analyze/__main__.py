@@ -1,0 +1,6 @@
+"""Entry point for ``python -m repro.analyze``."""
+import sys
+
+from repro.analyze.cli import main
+
+sys.exit(main())

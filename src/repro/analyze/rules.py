@@ -1,0 +1,542 @@
+"""The shipped rules. Importing this module populates the registry.
+
+Each check is ``check(mod, graph) -> list[Finding]`` where ``mod`` is a
+:class:`~repro.analyze.callgraph.ModuleInfo` and ``graph`` the whole-tree
+:class:`~repro.analyze.callgraph.CallGraph`. Rules are tuned to this
+repo's conventions (transport wire, spend ledger, compile-once engine) —
+they are not general-purpose lint.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analyze.callgraph import CallGraph, ModuleInfo, dotted
+from repro.analyze.registry import Finding, Rule, register
+
+# --------------------------------------------------------------------------
+# key-reuse: the DP-critical rule. A jax.random key consumed by a sampler
+# may not be consumed again — reuse correlates noise across Algorithm 1's
+# transmissions and voids the privacy accounting. Also flags arithmetic
+# seeds (PRNGKey(a + b)): adjacent streams collide; derive with fold_in
+# (repro.core.keys.stream_key) instead.
+# --------------------------------------------------------------------------
+
+# jax.random attributes that do NOT consume their first argument
+_NONCONSUMING = {"PRNGKey", "key", "fold_in", "key_data", "wrap_key_data",
+                 "clone", "key_impl", "default_prng_impl", "split"}
+
+_FRESH, _CONSUMED = "fresh", "consumed"
+
+
+def _key_expr(node) -> str | None:
+    """A trackable key expression: a bare name or name[const]."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if (isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name)
+            and isinstance(node.slice, ast.Constant)):
+        return f"{node.value.id}[{node.slice.value!r}]"
+    return None
+
+
+_PRODUCERS = ("PRNGKey", "key", "split", "fold_in", "clone",
+              "wrap_key_data")
+
+
+def _is_key_producing(node, imports) -> bool:
+    """True if the expression *itself* evaluates to PRNG keys. Top-level
+    only: ``jax.eval_shape(lambda: init(PRNGKey(0)))`` produces shapes,
+    not keys, even though a key ctor appears in the subtree."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(_is_key_producing(e, imports) for e in node.elts)
+    if isinstance(node, ast.Subscript):
+        return _is_key_producing(node.value, imports)
+    if isinstance(node, ast.Call):
+        d = dotted(node.func, imports)
+        return bool(d and d.startswith("jax.random.")
+                    and d.rsplit(".", 1)[-1] in _PRODUCERS)
+    return False
+
+
+class _KeyChecker:
+    """Per-function abstract interpreter over key lifecycles."""
+
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.state: dict = {}       # key expr -> (_FRESH|_CONSUMED, line)
+        self.findings: list = []
+        self._seen: set = set()
+
+    # -- reporting ---------------------------------------------------------
+    def _emit(self, node, message):
+        sig = (node.lineno, node.col_offset, message)
+        if sig not in self._seen:
+            self._seen.add(sig)
+            self.findings.append(Finding(
+                rule="key-reuse", path=self.mod.path, line=node.lineno,
+                col=node.col_offset, message=message))
+
+    # -- state helpers -----------------------------------------------------
+    def _consume(self, argnode):
+        e = _key_expr(argnode)
+        if e is None:
+            return
+        # first consumption marks the expression key-typed (covers
+        # function parameters, which are never explicitly bound)
+        status, line = self.state.get(e, (_FRESH, argnode.lineno))
+        if status == _CONSUMED:
+            self._emit(argnode,
+                       f"PRNG key {e!r} reused after being consumed at "
+                       f"line {line}; derive a fresh key with "
+                       "jax.random.split/fold_in before sampling again")
+        self.state[e] = (_CONSUMED, argnode.lineno)
+
+    def _bind(self, target, producing):
+        if isinstance(target, ast.Name):
+            # reassignment invalidates the name and any tracked elements
+            for k in [k for k in self.state
+                      if k == target.id or k.startswith(f"{target.id}[")]:
+                del self.state[k]
+            if producing:
+                self.state[target.id] = (_FRESH, target.lineno)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, producing)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, producing)
+        elif isinstance(target, ast.Subscript):
+            e = _key_expr(target)
+            if e is not None:
+                if producing:
+                    self.state[e] = (_FRESH, target.lineno)
+                else:
+                    self.state.pop(e, None)
+
+    # -- expression evaluation --------------------------------------------
+    def eval(self, node):
+        if node is None:
+            return
+        if isinstance(node, ast.Call):
+            self._eval_call(node)
+            return
+        if isinstance(node, ast.IfExp):
+            self.eval(node.test)
+            before = dict(self.state)
+            self.eval(node.body)
+            branch = self.state
+            self.state = dict(before)
+            self.eval(node.orelse)
+            self._merge(branch)
+            return
+        if isinstance(node, (ast.Lambda,)):
+            self.eval(node.body)
+            return
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            self._eval_comp(node)
+            return
+        for child in ast.iter_child_nodes(node):
+            self.eval(child)
+
+    def _eval_comp(self, node):
+        for gen in node.generators:
+            self.eval(gen.iter)
+            self._bind(gen.target, producing=False)
+            for cond in gen.ifs:
+                self.eval(cond)
+        body = ([node.key, node.value] if isinstance(node, ast.DictComp)
+                else [node.elt])
+        # two passes catch cross-iteration reuse of OUTER keys; the loop
+        # targets are rebound fresh before each pass (new value per iter)
+        for _ in range(2):
+            for gen in node.generators:
+                self._bind(gen.target, producing=False)
+            for expr in body:
+                self.eval(expr)
+
+    def _eval_call(self, node: ast.Call):
+        for arg in node.args:
+            self.eval(arg)
+        for kw in node.keywords:
+            self.eval(kw.value)
+        d = dotted(node.func, self.mod.imports)
+        if d and d.startswith("jax.random."):
+            name = d[len("jax.random."):]
+            if name in ("PRNGKey", "key"):
+                if node.args and any(isinstance(s, ast.BinOp)
+                                     for s in ast.walk(node.args[0])):
+                    self._emit(node,
+                               "arithmetic seed in jax.random."
+                               f"{name}(...): nearby streams collide; "
+                               "derive streams with fold_in "
+                               "(repro.core.keys.stream_key)")
+                return
+            if name == "split":
+                if node.args:
+                    self._consume(node.args[0])
+                return
+            if name in _NONCONSUMING:
+                return
+            if node.args:  # a sampler: consumes its key argument
+                self._consume(node.args[0])
+            return
+        # unknown call: passing a tracked key hands over ownership — treat
+        # as consumption so `f(key); normal(key)` and double `f(key)` flag
+        for arg in (*node.args, *(kw.value for kw in node.keywords)):
+            e = _key_expr(arg)
+            if e is not None and e in self.state:
+                self._consume(arg)
+
+    def _merge(self, other: dict):
+        """Join two branch states: consumed on either path wins."""
+        for k, (status, line) in other.items():
+            cur = self.state.get(k)
+            if cur is None or status == _CONSUMED:
+                self.state[k] = (status, line)
+
+    # -- statements --------------------------------------------------------
+    def exec_block(self, stmts):
+        for stmt in stmts:
+            self.exec_stmt(stmt)
+
+    def exec_stmt(self, stmt):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # analyzed as its own function
+        if isinstance(stmt, ast.Assign):
+            self.eval(stmt.value)
+            producing = _is_key_producing(stmt.value, self.mod.imports)
+            for target in stmt.targets:
+                self._bind(target, producing)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            self.eval(stmt.value)
+            if getattr(stmt, "target", None) is not None:
+                self._bind(stmt.target, _is_key_producing(
+                    stmt.value, self.mod.imports) if stmt.value else False)
+        elif isinstance(stmt, (ast.Expr, ast.Return)):
+            self.eval(stmt.value)
+        elif isinstance(stmt, ast.If):
+            self.eval(stmt.test)
+            before = dict(self.state)
+            self.exec_block(stmt.body)
+            branch = self.state
+            self.state = dict(before)
+            self.exec_block(stmt.orelse)
+            # a branch that leaves the function contributes nothing to the
+            # fall-through state (if flag: return sample(key) / sample(key))
+            body_ends = _terminates(stmt.body)
+            if _terminates(stmt.orelse):
+                if not body_ends:
+                    self.state = branch
+            elif not body_ends:
+                self._merge(branch)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.eval(stmt.iter)
+            # second pass catches carry-over reuse of outer keys; the loop
+            # target is rebound fresh before each pass
+            for _ in range(2):
+                self._bind(stmt.target, producing=False)
+                self.exec_block(stmt.body)
+            self.exec_block(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            for _ in range(2):
+                self.eval(stmt.test)
+                self.exec_block(stmt.body)
+            self.exec_block(stmt.orelse)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self.eval(item.context_expr)
+            self.exec_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.exec_block(stmt.body)
+            for handler in stmt.handlers:
+                self.exec_block(handler.body)
+            self.exec_block(stmt.orelse)
+            self.exec_block(stmt.finalbody)
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self.eval(child)
+
+
+def _terminates(stmts) -> bool:
+    """True if a straight-line block always leaves the enclosing scope."""
+    return any(
+        isinstance(s, (ast.Return, ast.Raise, ast.Break, ast.Continue))
+        for s in stmts
+    )
+
+
+def check_key_reuse(mod: ModuleInfo, graph: CallGraph) -> list:
+    findings = []
+    for fn in mod.functions.values():
+        checker = _KeyChecker(mod)
+        if isinstance(fn.node, ast.Module):
+            body = [s for s in fn.node.body
+                    if not isinstance(s, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef, ast.ClassDef))]
+            checker.exec_block(body)
+        else:
+            checker.exec_block(fn.node.body)
+        findings.extend(checker.findings)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# wire-boundary: outside core/transport.py (and the subsystems' own
+# packages), nobody dispatches repro.agg kernels or repro.attacks
+# primitives directly — consumers go through wire_noise / wire_corrupt /
+# wire_aggregate so single-leaf byte parity and per-leaf keying stay in
+# one audited place.
+# --------------------------------------------------------------------------
+
+_WIRE_FORBIDDEN = {
+    "repro.agg.aggregate": "wire_aggregate",
+    "repro.agg.registry.aggregate": "wire_aggregate",
+    "repro.agg.kernel.ostat_pallas": "wire_aggregate",
+    "repro.agg.ostat_pallas": "wire_aggregate",
+    "repro.agg.kernel.dcq_pallas": "wire_aggregate",
+    "repro.agg.dcq_pallas": "wire_aggregate",
+    "repro.attacks.apply_attack": "wire_corrupt",
+    "repro.attacks.registry.apply_attack": "wire_corrupt",
+}
+_WIRE_ALLOWED_PREFIXES = ("repro.core.transport", "repro.agg",
+                          "repro.attacks", "repro.analyze")
+
+
+def check_wire_boundary(mod: ModuleInfo, graph: CallGraph) -> list:
+    if any(mod.modname == p or mod.modname.startswith(p + ".")
+           for p in _WIRE_ALLOWED_PREFIXES):
+        return []
+    findings = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func, mod.imports)
+        if d in _WIRE_FORBIDDEN:
+            findings.append(Finding(
+                rule="wire-boundary", path=mod.path, line=node.lineno,
+                col=node.col_offset,
+                message=f"direct call to {d} outside the transport wire; "
+                        f"use repro.core.transport.{_WIRE_FORBIDDEN[d]}"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# ledger-pairing: every noise-injection site must reach a spend /
+# tree_spend_ledger record in the same protocol scope (the module closure
+# of the site's transitive callers and callees). Noise without a matching
+# ledger entry is unaccounted privacy spend.
+# --------------------------------------------------------------------------
+
+_NOISE_PRIMS = {
+    "repro.core.transport.wire_noise",
+    "repro.dist.grad_agg.add_dp_noise",
+    "repro.core.dp.add_noise",
+}
+_NOISE_SHORT = {q.rsplit(".", 1)[-1] for q in _NOISE_PRIMS}
+_LEDGER_CALL_NAMES = {"spend", "spend_tree", "tree_spend_ledger"}
+_LEDGER_KEYWORDS = {"ledger_eps", "ledger_delta", "ledger"}
+
+
+def _module_has_ledger_marker(mod: ModuleInfo) -> bool:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func, mod.imports)
+        last = d.rsplit(".", 1)[-1] if d else ""
+        if last in _LEDGER_CALL_NAMES or "spend_record" in last:
+            return True
+        if any(kw.arg in _LEDGER_KEYWORDS for kw in node.keywords):
+            return True
+    return False
+
+
+def check_ledger_pairing(mod: ModuleInfo, graph: CallGraph) -> list:
+    findings = []
+    marker_cache: dict = {}
+
+    def has_marker(modname: str) -> bool:
+        if modname not in marker_cache:
+            infos = [m for m in graph.modules.values()
+                     if m.modname == modname]
+            marker_cache[modname] = any(_module_has_ledger_marker(m)
+                                        for m in infos)
+        return marker_cache[modname]
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func, mod.imports)
+        if d is not None and "." not in d:
+            d = f"{mod.modname}.{d}"  # unqualified call in defining module
+        if d not in _NOISE_PRIMS:
+            continue
+        fn = graph.enclosing(mod, node)
+        if fn.name in _NOISE_SHORT:
+            continue  # the primitive's own definition
+        scope = graph.scope_modules(fn) | {mod.modname}
+        if not any(has_marker(m) for m in scope):
+            findings.append(Finding(
+                rule="ledger-pairing", path=mod.path, line=node.lineno,
+                col=node.col_offset,
+                message=f"noise injection via {d.rsplit('.', 1)[-1]} has no "
+                        "spend/tree_spend_ledger record anywhere in its "
+                        "protocol scope; record the budget this noise "
+                        "spends (see core/dp.py)"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# jit-purity: inside jit-reachable functions, flag host syncs (float(),
+# int-from-traced is allowed, .item(), bool(), np.*) and Python branches
+# on traced values — core/protocol.py documents this contract in prose;
+# this rule enforces it.
+# --------------------------------------------------------------------------
+
+_HOST_CASTS = {"float", "bool"}
+
+
+def _walk_own(fn_node):
+    """Walk a function body without descending into nested defs/classes
+    (they are separate FunctionInfos); lambdas belong to the enclosing
+    function and are included."""
+    stack = list(ast.iter_child_nodes(fn_node))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _traced_branch_test(test, imports) -> bool:
+    """A test expression that calls into jax.numpy — a Python branch on a
+    traced value, which fails (or silently constant-folds) under jit."""
+    for sub in ast.walk(test):
+        if isinstance(sub, ast.Call):
+            d = dotted(sub.func, imports)
+            if d and (d.startswith("jax.numpy.") or d.startswith("jnp.")):
+                return True
+    return False
+
+
+def check_jit_purity(mod: ModuleInfo, graph: CallGraph) -> list:
+    findings = []
+    for fn in mod.functions.values():
+        if fn.qual not in graph.jit_reachable:
+            continue
+        if isinstance(fn.node, ast.Module):
+            continue
+        for node in _walk_own(fn.node):
+            if isinstance(node, ast.Call):
+                d = dotted(node.func, mod.imports)
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id in _HOST_CASTS and node.args
+                        and not isinstance(node.args[0], ast.Constant)):
+                    findings.append(Finding(
+                        rule="jit-purity", path=mod.path, line=node.lineno,
+                        col=node.col_offset,
+                        message=f"host cast {node.func.id}(...) inside "
+                                f"jit-reachable {fn.name!r}: forces a "
+                                "device sync / tracer error under jit"))
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item" and not node.args):
+                    findings.append(Finding(
+                        rule="jit-purity", path=mod.path, line=node.lineno,
+                        col=node.col_offset,
+                        message=f".item() inside jit-reachable {fn.name!r}: "
+                                "host sync; keep values on device"))
+                elif d and d.startswith("numpy."):
+                    findings.append(Finding(
+                        rule="jit-purity", path=mod.path, line=node.lineno,
+                        col=node.col_offset,
+                        message=f"numpy call {d}(...) inside jit-reachable "
+                                f"{fn.name!r}: silently syncs to host; use "
+                                "jax.numpy (or math.* on static shapes)"))
+            elif isinstance(node, (ast.If, ast.While)):
+                if _traced_branch_test(node.test, mod.imports):
+                    findings.append(Finding(
+                        rule="jit-purity", path=mod.path, line=node.lineno,
+                        col=node.col_offset,
+                        message="Python branch on a traced value inside "
+                                f"jit-reachable {fn.name!r}: use jnp.where/"
+                                "lax.cond"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# pallas-static: pl.pallas_call grids and BlockSpec dims must be
+# compile-time constants, and library code must not hardcode
+# interpret=True (backend selection belongs to the caller / auto-detect).
+# --------------------------------------------------------------------------
+
+def _dynamic_dim(expr, imports) -> bool:
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Call):
+            d = dotted(sub.func, imports)
+            if d and (d.startswith("jax.numpy.") or d.startswith("jnp.")
+                      or d.startswith("jax.")):
+                return True
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, float):
+            return True
+    return False
+
+
+def check_pallas_static(mod: ModuleInfo, graph: CallGraph) -> list:
+    findings = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func, mod.imports)
+        if d and d.rsplit(".", 1)[-1] == "pallas_call":
+            for kw in node.keywords:
+                if (kw.arg == "interpret"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    findings.append(Finding(
+                        rule="pallas-static", path=mod.path,
+                        line=kw.value.lineno, col=kw.value.col_offset,
+                        message="hardcoded interpret=True in pallas_call: "
+                                "thread an interpret flag / auto-detect "
+                                "off-TPU instead"))
+                elif kw.arg == "grid" and _dynamic_dim(kw.value, mod.imports):
+                    findings.append(Finding(
+                        rule="pallas-static", path=mod.path,
+                        line=kw.value.lineno, col=kw.value.col_offset,
+                        message="pallas_call grid must be built from "
+                                "compile-time constants (ints, static "
+                                "shapes), not traced values"))
+        elif d and d.rsplit(".", 1)[-1] == "BlockSpec" and node.args:
+            if _dynamic_dim(node.args[0], mod.imports):
+                findings.append(Finding(
+                    rule="pallas-static", path=mod.path,
+                    line=node.args[0].lineno, col=node.args[0].col_offset,
+                    message="BlockSpec block shape must be compile-time "
+                            "constant ints"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+
+register(Rule(
+    name="key-reuse", check=check_key_reuse,
+    doc="a consumed jax.random key may not be consumed again without "
+        "split/fold_in; arithmetic PRNGKey seeds collide across streams"))
+register(Rule(
+    name="wire-boundary", check=check_wire_boundary,
+    doc="outside core/transport.py, use wire_noise/wire_corrupt/"
+        "wire_aggregate instead of raw agg/attacks dispatch"))
+register(Rule(
+    name="ledger-pairing", check=check_ledger_pairing,
+    doc="every noise-injection site must reach a spend/tree_spend_ledger "
+        "record in its protocol scope", uses_callgraph=True))
+register(Rule(
+    name="jit-purity", check=check_jit_purity,
+    doc="no float()/bool()/.item()/np.* host syncs or Python branches on "
+        "traced values inside jit-reachable functions",
+    uses_callgraph=True))
+register(Rule(
+    name="pallas-static", check=check_pallas_static,
+    doc="pallas_call grid/BlockSpec dims must be compile-time constants; "
+        "no hardcoded interpret=True in library code"))

@@ -20,10 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import attacks
-from repro.agg import aggregate
 from repro.configs.base import ProtocolConfig
 from repro.core import dp, local
 from repro.core.losses import MEstimationProblem
+from repro.core.transport import wire_aggregate, wire_corrupt
 
 
 @dataclasses.dataclass
@@ -66,8 +66,8 @@ def newton_estimator(problem: MEstimationProblem, cfg: ProtocolConfig,
         lam = cfg.lambda_s
     s1 = dp.s1_theta(p, n, cfg.gammas[0], eps_r, delta_r, lam, cfg.tail)
     theta_dp = theta_local if cfg.noiseless else dp.add_noise(keys[0], theta_local, s1)
-    theta_dp = attacks.apply_attack(theta_dp, byz_mask, attack,
-                                    attack_factor, keys[1], round_idx=0)
+    theta_dp = wire_corrupt(keys[1], theta_dp, byz_mask, attack=attack,
+                            factor=attack_factor, round_idx=0)
     acct.spend("R1 theta", eps_r, delta_r, s1)
     theta_init = jnp.median(theta_dp, axis=0)
 
@@ -84,15 +84,15 @@ def newton_estimator(problem: MEstimationProblem, cfg: ProtocolConfig,
     # terminal strength (round_idx would otherwise freeze them mid-ramp
     # and misreport the baseline as artificially robust)
     last = attacks.N_PROTOCOL_ROUNDS - 1
-    grads = attacks.apply_attack(grads, byz_mask, attack, attack_factor,
-                                 keys[4], round_idx=last)
-    hesss = attacks.apply_attack(hesss, byz_mask, attack, attack_factor,
-                                 keys[5], round_idx=last)
+    grads = wire_corrupt(keys[4], grads, byz_mask, attack=attack,
+                         factor=attack_factor, round_idx=last)
+    hesss = wire_corrupt(keys[5], hesss, byz_mask, attack=attack,
+                         factor=attack_factor, round_idx=last)
     acct.spend("R2 grad", eps_r / 2, delta_r / 2, s2g)
     acct.spend("R2 hessian", eps_r / 2, delta_r / 2, s2h)
 
-    g_agg = aggregate(grads, method="median", axis=0)
-    h_agg = aggregate(hesss, method="median", axis=0)
+    g_agg = wire_aggregate(grads, "median")
+    h_agg = wire_aggregate(hesss, "median")
     # symmetrise + ridge for invertibility under heavy DP noise
     h_agg = 0.5 * (h_agg + h_agg.T) + 1e-6 * jnp.eye(p, dtype=X.dtype)
     # guard: project onto PD cone (noise can flip eigenvalues when p large)
@@ -127,9 +127,9 @@ def gd_estimator(problem: MEstimationProblem, cfg: ProtocolConfig,
             grads = dp.add_noise(keys[2 * t], grads, s2)
         # round_idx = t: ramping attacks climb over the first protocol-
         # length window of GD rounds, then clamp at full strength
-        grads = attacks.apply_attack(grads, byz_mask, attack, attack_factor,
-                                     keys[2 * t + 1], round_idx=t)
-        g = aggregate(grads, method="median", axis=0)
+        grads = wire_corrupt(keys[2 * t + 1], grads, byz_mask, attack=attack,
+                             factor=attack_factor, round_idx=t)
+        g = wire_aggregate(grads, "median")
         theta = theta - lr * g
         acct.spend(f"GD round {t}", eps_r, delta_r, s2)
     return BaselineResult(theta=theta, accountant=acct,

@@ -1,0 +1,43 @@
+"""Named PRNG streams: collision-free key derivation for launchers and
+sweeps.
+
+The anti-pattern this replaces is arithmetic seed offsets —
+``PRNGKey(1000 + seed)`` for the protocol and ``PRNGKey(seed + 1)`` for
+the data collide as soon as seeds span the offset gap (seed 1001's data
+stream IS seed 1's protocol stream), silently correlating the DP noise
+of different replicates. ``stream_key`` derives every purpose-stream
+from ONE root key by :func:`jax.random.fold_in` over a registered stream
+index, so distinct (seed, stream, index) triples give independent keys
+for every seed range.
+
+The sweep executor keeps its historical arithmetic derivation behind an
+annotated ``repro: allow(key-reuse)`` suppression — preset artifacts are
+byte-pinned to it (tests/test_analyze.py locks the parity) — and new
+code uses these streams.
+"""
+from __future__ import annotations
+
+import jax
+
+#: registered purpose-streams, in fold_in index order. Append only —
+#: reordering re-derives every downstream key.
+STREAMS = ("params", "data", "protocol", "batches", "attack", "serve",
+           "eval")
+
+
+def stream_key(seed: int, stream: str, index=None) -> jax.Array:
+    """An independent key for ``stream`` under ``seed``.
+
+    ``index`` (optional) folds a per-step / per-replicate counter into
+    the stream, replacing ``PRNGKey(seed + i)`` loops. Unknown stream
+    names raise (the namespace is the collision guarantee).
+    """
+    try:
+        idx = STREAMS.index(stream)
+    except ValueError:
+        raise ValueError(
+            f"unknown stream {stream!r}; registered: {STREAMS}") from None
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), idx)
+    if index is not None:
+        k = jax.random.fold_in(k, index)
+    return k

@@ -52,7 +52,7 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.agg import aggregate, median_deviation_variance
+from repro.agg import median_deviation_variance
 from repro.configs.base import ProtocolConfig, TreeProtocolConfig
 from repro.core import dp, local
 from repro.core import transport
@@ -266,12 +266,12 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
         lam_j = jnp.full((m_plus_1,), cfg.lambda_s, X.dtype)
     s1_base = sb["R1 theta"]
     s1_j = s1_base / lam_j                         # per-machine sd
-    s1 = aggregate(s1_j, "median")                 # reported/summary value
+    s1 = wire_aggregate(s1_j, "median")            # reported/summary value
     theta_dp = noise(keys[0], theta_local, s1_j)   # per-machine (m+1,) sd
     theta_dp = corrupt(theta_dp, keys[1], 0)
     sig.append(s1)
 
-    theta_med = aggregate(theta_dp, "median", axis=0)
+    theta_med = wire_aggregate(theta_dp, "median")
     if cfg.center_trust == "trusted":
         sig2 = local.sandwich_diag_variance(prob, theta_med, Xc, yc)
     else:
@@ -280,8 +280,8 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     s1_eff = 0.0 if cfg.noiseless else s1_j[0]     # center's estimate
     scale1 = jnp.sqrt((sig2 + n * s1_eff ** 2)) / jnp.sqrt(n)
     agg1 = "median" if cfg.center_trust == "untrusted" else cfg.aggregator
-    theta_cq = aggregate(theta_dp, method=agg1, scale=scale1, K=cfg.K,
-                         trim_beta=cfg.trim_beta, axis=0)
+    theta_cq = wire_aggregate(theta_dp, agg1, scale=scale1, K=cfg.K,
+                              trim_beta=cfg.trim_beta)
     if theta_cq_override is not None:
         # warm start / ablation hook: continue the protocol from a
         # caller-supplied initial estimate.
@@ -309,7 +309,7 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
         node_gvar = wire_corrupt(keys[5], node_gvar, byz_mask[1:],
                                  attack=attack, factor=attack_factor,
                                  round_idx=1)
-        gvar = aggregate(node_gvar, "median", axis=0)
+        gvar = wire_aggregate(node_gvar, "median")
         sig.append(s6)
     scale2 = jnp.sqrt(jnp.maximum(gvar, 1e-12) + n * s2_eff ** 2) / jnp.sqrt(n)
     g_cq = _agg_for(cfg, "grad", grads_dp, scale2)

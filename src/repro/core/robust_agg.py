@@ -17,6 +17,9 @@ def aggregate(values, method: str = "dcq", scale=None, K: int = 10,
     registry (reference backend, preserving the pre-registry numerics)."""
     from repro.agg import aggregate as _aggregate
     try:
+        # repro: allow(wire-boundary) — deprecated shim whose whole job is
+        # the historical raw dispatch (reference backend, ValueError
+        # contract); new code imports repro.agg / the transport wire.
         return _aggregate(values, method, scale=scale, K=K,
                           trim_beta=trim_beta, axis=axis,
                           backend="reference")

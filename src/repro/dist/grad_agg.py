@@ -29,8 +29,9 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro import agg, attacks
-from repro.core.transport import tree_leaf_dims, wire_noise
+from repro import attacks
+from repro.core.transport import (leaf_paths, tree_leaf_dims,
+                                  wire_aggregate, wire_noise)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +88,42 @@ def calibrate_leaf_sigmas(grads: Any, cfg: GradAggConfig) -> Any:
                               cfg.dp_delta, cfg.dp_tail)
 
 
+def spend_record(tree: Any, cfg: GradAggConfig, accountant=None,
+                 name: str = "grad step",
+                 machine_axis: bool = False) -> list:
+    """The ledger entry pairing ONE :func:`robust_aggregate` transmission
+    with the budget its noise spends (host-side, static shapes only).
+
+    Returns one record per leaf — ``{transmission, leaf, dim, sigma, eps,
+    delta}`` — mirroring ``dp.tree_spend_ledger``'s shape for the single
+    training transmission. With ``dp_eps > 0`` the sigmas are the same
+    per-leaf calibration ``add_dp_noise`` applies, and an optional
+    ``accountant`` gets one ``spend_tree`` composition entry; legacy flat
+    ``dp_sigma`` noise is recorded with ``eps=None`` (uncalibrated — no
+    DP claim). No noise, no records.
+    """
+    from repro.core import dp
+    dims_tree = tree_leaf_dims(tree, machine_axis=machine_axis)
+    paths = leaf_paths(tree)
+    dims = [int(d) for d in jax.tree_util.tree_leaves(dims_tree)]
+    if cfg.dp_eps > 0:
+        sigma_tree = dp.tree_mean_sigma(dims_tree, cfg.dp_n, cfg.dp_gamma,
+                                        cfg.dp_eps, cfg.dp_delta,
+                                        cfg.dp_tail)
+        sigmas = [float(s) for s in jax.tree_util.tree_leaves(sigma_tree)]
+        eps, delta = cfg.dp_eps, cfg.dp_delta
+        if accountant is not None:
+            accountant.spend_tree(name, eps, delta, sigma_tree)
+    elif cfg.dp_sigma:
+        sigmas = [float(cfg.dp_sigma)] * len(dims)
+        eps = delta = None
+    else:
+        return []
+    return [{"transmission": name, "leaf": p, "dim": d, "sigma": s,
+             "eps": eps, "delta": delta}
+            for p, d, s in zip(paths, dims, sigmas)]
+
+
 def corrupt_machines(grads: Any, byz_mask: Optional[jnp.ndarray],
                      cfg: GradAggConfig, key: jax.Array,
                      round_idx: Optional[int] = None) -> Any:
@@ -106,6 +143,10 @@ def corrupt_machines(grads: Any, byz_mask: Optional[jnp.ndarray],
         round_idx = attacks.N_PROTOCOL_ROUNDS - 1
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     keys = jax.random.split(key, len(leaves))
+    # repro: allow(wire-boundary) — historical per-leaf dispatch splits the
+    # key even for single-leaf trees (unlike wire_corrupt's byte-parity
+    # rule); routing through the wire would change every pinned training
+    # draw. See tests/test_train.py golden losses.
     out = [attacks.apply_attack(leaf, byz_mask, attack=attack,
                                 factor=cfg.attack_factor, key=k,
                                 round_idx=round_idx)
@@ -133,9 +174,9 @@ def aggregate_machine_axis(values: jnp.ndarray,
         raise ValueError(f"need a leading machine axis, got {values.shape}")
     method = "dcq_mad" if cfg.method == "dcq" else cfg.method
     try:
-        out = agg.aggregate(values, method, K=cfg.K,
-                            trim_beta=cfg.trim_beta, axis=0,
-                            backend=_backend(cfg))
+        out = wire_aggregate(values, method, K=cfg.K,
+                             trim_beta=cfg.trim_beta,
+                             backend=_backend(cfg))
     except KeyError:
         raise ValueError(f"unknown aggregation method {cfg.method!r}") \
             from None

@@ -23,6 +23,9 @@ def dcq_aggregate(values: jnp.ndarray, K: int = 10,
     """Robust DCQ aggregation of (m, p) -> (p,) with MAD scale; routes
     through the repro.agg registry ("dcq_mad")."""
     backend = "reference" if prefer == "jnp" else "pallas"
+    # repro: allow(wire-boundary) — kernel-level back-compat shim: this IS
+    # a raw registry dispatch by contract (pre-PR4 callers pin the backend
+    # here); model-path consumers use wire_aggregate.
     return agg.aggregate(values, "dcq_mad", K=K, backend=backend)
 
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.keys import stream_key
 from repro.models.model import Model
 
 
@@ -38,21 +39,30 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="root seed; init/prompt/sampling keys are derived "
+                    "as independent fold_in streams (repro.core.keys)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=True)
     model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    params = model.init(stream_key(args.seed, "params"))
     B = args.batch
     max_len = args.prompt_len + args.gen
     cache = model.init_cache(B, max_len)
 
-    key = jax.random.PRNGKey(1)
+    # the prompt and the decode sampling loop are separate streams: the
+    # historical single key was consumed by randint AND re-split in the
+    # decode loop, correlating prompts with sampling noise
+    prompt_key = stream_key(args.seed, "serve", index=0)
     if cfg.family == "audio":
-        prompt = jax.random.randint(key, (B, args.prompt_len,
-                                          cfg.n_codebooks), 0, cfg.vocab)
+        prompt = jax.random.randint(prompt_key, (B, args.prompt_len,
+                                                 cfg.n_codebooks),
+                                    0, cfg.vocab)
     else:
-        prompt = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
+        prompt = jax.random.randint(prompt_key, (B, args.prompt_len),
+                                    0, cfg.vocab)
+    key = stream_key(args.seed, "serve", index=1)
 
     t0 = time.time()
     logits, cache = prefill_into_cache(model, params, prompt, cache)

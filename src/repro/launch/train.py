@@ -29,6 +29,7 @@ from repro.attacks import ALIASES as ATTACK_ALIASES
 from repro.attacks import registered as registered_attacks
 from repro.checkpoint import checkpoint
 from repro.configs import get_config
+from repro.core.keys import stream_key
 from repro.configs.base import TreeProtocolConfig
 from repro.data.lm import synthetic_lm_batches
 from repro.dist.grad_agg import GradAggConfig
@@ -47,6 +48,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="root seed; init/data/protocol keys are derived "
+                    "as independent fold_in streams (repro.core.keys)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--machines", type=int, default=4)
@@ -83,8 +87,7 @@ def main(argv=None):
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = Model(cfg, remat=True)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
+    params = model.init(stream_key(args.seed, "params"))
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
     print(f"[train] {cfg.name} ({'reduced' if args.reduced else 'full'}): "
           f"{n_params/1e6:.1f}M params, {args.machines} machines, "
@@ -123,8 +126,8 @@ def main(argv=None):
 
     n_byz = int(args.byzantine * args.machines)
     byz_mask = (jnp.arange(args.machines) < n_byz) if n_byz else None
-    batches = synthetic_lm_batches(jax.random.PRNGKey(1), cfg, args.steps,
-                                   args.batch, args.seq)
+    batches = synthetic_lm_batches(stream_key(args.seed, "batches"), cfg,
+                                   args.steps, args.batch, args.seq)
 
     t0 = time.time()
     losses = []
@@ -137,7 +140,7 @@ def main(argv=None):
                   f"({time.time()-t0:.1f}s)")
 
     params, opt_state, _ = trainer.fit(params, batches,
-                                       jax.random.PRNGKey(2),
+                                       stream_key(args.seed, "protocol"),
                                        byz_mask=byz_mask, callback=cb)
     print(f"[train] done: first loss {losses[0]:.4f} -> last "
           f"{losses[-1]:.4f} in {time.time()-t0:.1f}s")

@@ -157,7 +157,11 @@ class SweepExecutor:
             else:
                 sigmas = {name: jnp.float32(0.0)
                           for name in dp.TREE_TRANSMISSIONS}
+            # repro: allow(key-reuse) — historical derivation: every preset
+            # artifact (and tests/golden/zoo_smoke.json) is byte-pinned to
+            # these exact streams; new code uses repro.core.keys.stream_key.
             key = jax.random.PRNGKey(1000 + s.seed)
+            # repro: allow(key-reuse) — same historical pin as above.
             data_key = jax.random.PRNGKey(s.seed + 1)
             t0 = time.perf_counter()
             losses, gnorm = [], 0.0

@@ -24,7 +24,8 @@ from jax.sharding import Mesh, NamedSharding
 from repro.configs.base import TreeProtocolConfig
 from repro.core.protocol import protocol_tree_rounds
 from repro.dist.collectives import tree_machine_specs
-from repro.dist.grad_agg import GradAggConfig, robust_aggregate
+from repro.dist.grad_agg import (GradAggConfig, robust_aggregate,
+                                 spend_record)
 from repro.models.model import Model
 from repro.train.optimizer import AdamW, apply_updates, global_norm
 
@@ -37,7 +38,8 @@ class TrainConfig:
     fsdp: bool = False             # ZeRO-style weight sharding over "data"
     grad_dtype: str = ""           # "" = native; "bfloat16" halves the
     #                                aggregation payload (§Perf knob)
-    agg: GradAggConfig = GradAggConfig(method="mean")
+    agg: GradAggConfig = dataclasses.field(
+        default_factory=lambda: GradAggConfig(method="mean"))
 
 
 def _split_machines(batch: Dict[str, jnp.ndarray], m: int):
@@ -121,7 +123,8 @@ class QNTrainConfig:
     """Robust DP quasi-Newton training: every optimizer step IS one run of
     Algorithm 1's five transmissions over the parameter pytree."""
     n_machines: int = 4
-    protocol: TreeProtocolConfig = TreeProtocolConfig()
+    protocol: TreeProtocolConfig = dataclasses.field(
+        default_factory=TreeProtocolConfig)
     attack: str = "none"           # repro.attacks registry name/alias
     attack_factor: float = -3.0
     remat: bool = True
@@ -207,18 +210,28 @@ class Trainer:
                  mesh: Optional[Mesh] = None):
         self.model, self.opt, self.tcfg = model, opt, tcfg
         self.step_fn = jax.jit(make_train_step(model, opt, tcfg, mesh))
+        self.ledger = None  # populated by fit(): per-step DP spend records
 
     def fit(self, params, batches, key, byz_mask=None, log_every: int = 10,
             callback=None):
         opt_state = self.opt.init(params)
+        # every step transmits one noised gradient pytree; the noise
+        # config is static, so one per-step ledger entry covers them all
+        # (basic composition: total spend = steps * per-step budget)
+        per_step = spend_record(params, self.tcfg.agg, name="grad step")
+        steps = 0
         history = []
         for i, batch in enumerate(batches):
             key, sub = jax.random.split(key)
             params, opt_state, metrics = self.step_fn(
                 params, opt_state, batch, sub, byz_mask)
+            steps = i + 1
             if i % log_every == 0 or callback:
                 loss = float(metrics["loss"])
                 history.append({"step": i, "loss": loss})
                 if callback:
                     callback(i, metrics)
+        eps = self.tcfg.agg.dp_eps
+        self.ledger = {"per_step": per_step, "steps": steps,
+                       "total_eps": steps * eps if eps > 0 else None}
         return params, opt_state, history

@@ -1,0 +1,16 @@
+"""Seeded jit-purity violations: host syncs and a Python branch on a
+traced value inside a jit-reachable function."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def traced_step(x):
+    if jnp.mean(x) > 0:          # VIOLATION: Python branch on traced value
+        x = x - 1.0
+    lr = float(jnp.max(x))       # VIOLATION: host cast under jit
+    host = np.asarray(x)         # VIOLATION: numpy sync under jit
+    return x * lr + host.sum() + x.sum().item()   # VIOLATION: .item()
+
+
+step = jax.jit(traced_step)

@@ -1,0 +1,17 @@
+"""Clean trace discipline: device-side branching inside jit, host casts
+only in the un-jitted driver."""
+import jax
+import jax.numpy as jnp
+
+
+def pure_step(x):
+    x = jnp.where(jnp.mean(x) > 0, x - 1.0, x)
+    return x * jnp.max(x)
+
+
+step = jax.jit(pure_step)
+
+
+def host_driver(x):
+    # NOT jit-reachable: float() on the host side is fine
+    return float(jnp.mean(step(x)))

@@ -1,0 +1,13 @@
+"""Seeded key-reuse violations: a consumed key sampled again, and an
+arithmetic seed. The analyzer must flag BOTH sites."""
+import jax
+
+
+def double_sample(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.normal(key, (4,))   # VIOLATION: key already consumed
+    return a + b
+
+
+def arithmetic_seed(seed):
+    return jax.random.PRNGKey(1000 + seed)   # VIOLATION: stream collision

@@ -1,0 +1,38 @@
+"""Clean key hygiene: split/fold_in before every consumption, branch-local
+consumption, loop-carried splitting. The analyzer must stay silent."""
+import jax
+
+
+def split_then_sample(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.normal(k2, (4,))
+    return a + b
+
+
+def fold_in_stream(key, n):
+    total = 0.0
+    for i in range(n):
+        total = total + jax.random.normal(jax.random.fold_in(key, i), ())
+    return total
+
+
+def branch_exclusive(key, flag):
+    if flag:
+        return jax.random.normal(key, (2,))
+    return jax.random.uniform(key, (2,))
+
+
+def loop_carried(key, n):
+    out = []
+    for _ in range(n):
+        key, sub = jax.random.split(key)
+        out.append(jax.random.normal(sub, ()))
+    return out
+
+
+def indexed_keys(key):
+    keys = jax.random.split(key, 4)
+    a = jax.random.normal(keys[0], ())
+    b = jax.random.normal(keys[1], ())
+    return a + b

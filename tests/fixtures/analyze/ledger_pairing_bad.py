@@ -1,0 +1,8 @@
+"""Seeded ledger-pairing violation: DP noise injected with no spend
+record anywhere in the caller scope."""
+from repro.core.transport import wire_aggregate, wire_noise
+
+
+def unaccounted_transmission(key, values, sigma):
+    noisy = wire_noise(key, values, sigma)   # VIOLATION: no spend record
+    return wire_aggregate(noisy, "median")

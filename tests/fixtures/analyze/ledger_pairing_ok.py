@@ -1,0 +1,9 @@
+"""Clean ledger pairing: the noise site's module records its spend."""
+from repro.core import dp
+from repro.core.transport import wire_aggregate, wire_noise
+
+
+def accounted_transmission(key, values, sigma, acct: dp.PrivacyAccountant):
+    noisy = wire_noise(key, values, sigma)
+    acct.spend("R1 theta", 1.0, 0.01, float(sigma))
+    return wire_aggregate(noisy, "median")

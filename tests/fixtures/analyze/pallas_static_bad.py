@@ -1,0 +1,18 @@
+"""Seeded pallas-static violations: traced grid dims and a hardcoded
+interpret=True in library-style code."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def launch(x):
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(int(jnp.shape(x)[0]), jnp.argmax(x)),   # VIOLATION: traced dim
+        interpret=True,                               # VIOLATION: hardcoded
+    )(x)

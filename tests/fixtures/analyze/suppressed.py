@@ -1,0 +1,24 @@
+"""Suppression round-trip fixture: one violation with a reasoned
+suppression (must be silenced and reported as suppressed), one with a
+bare marker (must stay active as a 'suppression' finding), one naming an
+unknown rule."""
+import jax
+
+
+def allowed_reuse(key):
+    a = jax.random.normal(key, (4,))
+    # repro: allow(key-reuse) — fixture: deliberate reuse kept for parity.
+    b = jax.random.normal(key, (4,))
+    return a + b
+
+
+def bare_marker(key):
+    a = jax.random.normal(key, (4,))
+    # repro: allow(key-reuse)
+    b = jax.random.normal(key, (4,))
+    return a + b
+
+
+def unknown_rule(key):
+    # repro: allow(made-up-rule) — no such rule registered.
+    return jax.random.normal(key, (4,))

@@ -1,0 +1,12 @@
+"""Seeded wire-boundary violations: raw registry dispatch outside the
+transport layer."""
+from repro import attacks
+from repro.agg import aggregate
+
+
+def raw_aggregate(values):
+    return aggregate(values, "median", axis=0)   # VIOLATION
+
+
+def raw_attack(values, mask, key):
+    return attacks.apply_attack(values, mask, "scale", -3.0, key)  # VIOLATION

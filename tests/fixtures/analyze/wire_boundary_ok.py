@@ -1,0 +1,7 @@
+"""Clean wire usage: consumers go through the transport primitives."""
+from repro.core.transport import wire_aggregate, wire_corrupt
+
+
+def via_wire(key, values, mask):
+    corrupted = wire_corrupt(key, values, mask, attack="scale")
+    return wire_aggregate(corrupted, "median")

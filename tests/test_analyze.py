@@ -1,0 +1,275 @@
+"""Tests for the repro.analyze static analyzer.
+
+Each rule is exercised against a seeded-violation fixture (must fire) and
+a clean twin (must stay silent); suppression syntax round-trips; the JSON
+report matches the documented schema; and the shipped tree self-checks
+clean so CI can gate on ``python -m repro.analyze``.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+from repro.analyze import Finding, Rule, analyze_paths, get_rule, register, registered, unregister
+from repro.analyze.cli import main as cli_main
+from repro.analyze.engine import SCHEMA
+from repro.analyze.suppress import parse as parse_suppressions
+from repro.core.keys import STREAMS, stream_key
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "analyze"
+
+RULE_FIXTURES = [
+    ("key-reuse", "key_reuse_bad.py", "key_reuse_ok.py"),
+    ("wire-boundary", "wire_boundary_bad.py", "wire_boundary_ok.py"),
+    ("ledger-pairing", "ledger_pairing_bad.py", "ledger_pairing_ok.py"),
+    ("jit-purity", "jit_purity_bad.py", "jit_purity_ok.py"),
+    ("pallas-static", "pallas_static_bad.py", "pallas_static_ok.py"),
+]
+
+
+def run_rule(rule: str, fixture: str):
+    return analyze_paths(
+        [str(FIXTURES / fixture)], rules=[rule], include_fixtures=True
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures: seeded violations caught, clean twins silent
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rule,bad,ok", RULE_FIXTURES)
+def test_rule_catches_seeded_violation(rule, bad, ok):
+    report = run_rule(rule, bad)
+    assert report.findings, f"{rule} missed every violation in {bad}"
+    assert all(f.rule == rule for f in report.findings)
+    assert report.exit_code == 1
+
+
+@pytest.mark.parametrize("rule,bad,ok", RULE_FIXTURES)
+def test_rule_silent_on_clean_twin(rule, bad, ok):
+    report = run_rule(rule, ok)
+    assert report.findings == [], (
+        f"{rule} false-positives on {ok}: "
+        f"{[(f.line, f.message) for f in report.findings]}"
+    )
+    assert report.exit_code == 0
+
+
+def test_key_reuse_flags_arithmetic_seed():
+    report = run_rule("key-reuse", "key_reuse_bad.py")
+    assert any("arithmetic seed" in f.message for f in report.findings)
+
+
+def test_jit_purity_flags_each_sync_kind():
+    messages = " | ".join(
+        f.message for f in run_rule("jit-purity", "jit_purity_bad.py").findings
+    )
+    for marker in (".item()", "numpy", "float(", "branch on a traced value"):
+        assert marker in messages, f"jit-purity missed {marker!r}"
+
+
+def test_pallas_static_flags_grid_and_interpret():
+    messages = " | ".join(
+        f.message
+        for f in run_rule("pallas-static", "pallas_static_bad.py").findings
+    )
+    assert "grid" in messages
+    assert "interpret=True" in messages
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+def test_suppression_with_reason_silences_finding():
+    report = run_rule("key-reuse", "suppressed.py")
+    suppressed = [f for f in report.suppressed if f.rule == "key-reuse"]
+    assert len(suppressed) == 1
+    assert "parity" in suppressed[0].reason
+
+
+def test_bare_suppression_is_itself_a_finding():
+    report = run_rule("key-reuse", "suppressed.py")
+    sup = [f for f in report.findings if f.rule == "suppression"]
+    assert len(sup) == 2  # missing reason + unknown rule
+    assert any("reason" in f.message for f in sup)
+    assert any("unknown rule" in f.message for f in sup)
+    # the reuse under the bare marker stays an active finding
+    assert any(f.rule == "key-reuse" for f in report.findings)
+
+
+def test_suppression_parse_round_trip():
+    src = (
+        "x = 1\n"
+        "# repro: allow(key-reuse) — deliberate, see EXPERIMENTS.md.\n"
+        "y = 2\n"
+        '"""not a comment: # repro: allow(jit-purity) — docstring."""\n'
+        "# repro: allow-file(wire-boundary) — whole-file waiver.\n"
+    )
+    sups = parse_suppressions(src)
+    assert len(sups) == 2  # the docstring mention must NOT parse
+    by_kind = {s.kind: s for s in sups}
+    assert by_kind["allow"].rules == ("key-reuse",)
+    assert by_kind["allow"].reason == "deliberate, see EXPERIMENTS.md."
+    assert by_kind["allow-file"].rules == ("wire-boundary",)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_round_trip():
+    assert set(registered()) >= {
+        "key-reuse",
+        "wire-boundary",
+        "ledger-pairing",
+        "jit-purity",
+        "pallas-static",
+    }
+    rule = Rule(
+        name="test-noop",
+        check=lambda mod, graph: [],
+        doc="noop rule for the registry test",
+    )
+    register(rule)
+    try:
+        assert get_rule("test-noop") is rule
+        with pytest.raises(ValueError):
+            register(rule)
+    finally:
+        unregister("test-noop")
+    with pytest.raises(KeyError):
+        get_rule("test-noop")
+
+
+# ---------------------------------------------------------------------------
+# JSON schema + CLI
+# ---------------------------------------------------------------------------
+def test_json_report_schema():
+    report = run_rule("key-reuse", "key_reuse_bad.py")
+    payload = report.to_json()
+    assert payload["schema"] == SCHEMA == "repro.analyze/v1"
+    assert set(payload) == {
+        "schema",
+        "roots",
+        "files",
+        "rules",
+        "findings",
+        "suppressed",
+        "counts",
+    }
+    assert payload["counts"]["findings"] == len(payload["findings"]) > 0
+    assert payload["counts"]["per_rule"]["key-reuse"] == len(payload["findings"])
+    finding = payload["findings"][0]
+    assert set(finding) >= {"rule", "path", "line", "col", "message"}
+    assert isinstance(finding["line"], int)
+
+
+def test_finding_to_dict_includes_reason_when_suppressed():
+    f = Finding(
+        rule="key-reuse",
+        path="x.py",
+        line=1,
+        col=0,
+        message="m",
+        suppressed=True,
+        reason="why",
+    )
+    d = f.to_dict()
+    assert d["reason"] == "why"
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = FIXTURES / "key_reuse_bad.py"
+    out = tmp_path / "report.json"
+    rc = cli_main(
+        [str(bad), "--rules", "key-reuse", "--include-fixtures",
+         "--json", str(out), "--quiet"]
+    )
+    assert rc == 1
+    assert out.exists()
+    rc = cli_main(
+        [str(FIXTURES / "key_reuse_ok.py"), "--rules", "key-reuse",
+         "--include-fixtures", "--quiet"]
+    )
+    assert rc == 0
+
+
+def test_cli_list_rules(capsys):
+    rc = cli_main(["--list-rules"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    for name in ("key-reuse", "pallas-static"):
+        assert name in out
+
+
+# ---------------------------------------------------------------------------
+# self-check: the shipped tree is clean (this is what CI gates on)
+# ---------------------------------------------------------------------------
+def test_shipped_tree_is_clean():
+    report = analyze_paths(
+        [str(REPO / "src"), str(REPO / "benchmarks"), str(REPO / "examples")]
+    )
+    assert report.findings == [], (
+        "analyzer must be clean on the shipped tree:\n"
+        + "\n".join(
+            f"{f.path}:{f.line} [{f.rule}] {f.message}"
+            for f in report.findings
+        )
+    )
+    assert report.exit_code == 0
+    # every suppression in the tree carries a reason
+    assert all(f.reason for f in report.suppressed)
+
+
+def test_module_entry_point_runs():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analyze", str(REPO / "src" / "repro" / "analyze"), "--quiet"],
+        capture_output=True,
+        text=True,
+        cwd=str(REPO),
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# satellite: fold_in stream helper + historical executor key parity
+# ---------------------------------------------------------------------------
+def test_stream_keys_are_pairwise_distinct():
+    keys = [stream_key(0, s) for s in STREAMS]
+    datas = {bytes(jax.random.key_data(k).tobytes()) for k in keys}
+    assert len(datas) == len(STREAMS)
+
+
+def test_stream_key_index_derivation():
+    base = stream_key(3, "serve")
+    k0 = stream_key(3, "serve", index=0)
+    k1 = stream_key(3, "serve", index=1)
+    assert (
+        jax.random.key_data(k0).tobytes()
+        != jax.random.key_data(k1).tobytes()
+        != jax.random.key_data(base).tobytes()
+    )
+
+
+def test_stream_key_unknown_stream():
+    with pytest.raises(ValueError):
+        stream_key(0, "nope")
+
+
+def test_historical_executor_keys_unchanged():
+    # The sweep executor's PRNGKey(1000 + seed) / PRNGKey(seed + 1) lines are
+    # pinned behind suppressions: recorded sweeps must replay byte-identically,
+    # so the raw threefry key words are asserted here.
+    import numpy as np
+
+    for seed in (0, 7):
+        run_key = np.asarray(jax.random.key_data(jax.random.PRNGKey(1000 + seed)))
+        data_key = np.asarray(jax.random.key_data(jax.random.PRNGKey(seed + 1)))
+        assert run_key.tolist() == [0, 1000 + seed]
+        assert data_key.tolist() == [0, seed + 1]
+        # the new stream helper must NOT collide with the pinned lines
+        folded = np.asarray(jax.random.key_data(stream_key(seed, "protocol")))
+        assert folded.tolist() not in (run_key.tolist(), data_key.tolist())
