@@ -1,7 +1,7 @@
 """Benchmark regression gates: compare fresh BENCH_protocol.json /
-BENCH_agg.json / BENCH_attacks.json / BENCH_train.json records against
-the committed baselines and fail on a steady-state slowdown of a
-compiled hot path.
+BENCH_agg.json / BENCH_attacks.json / BENCH_train.json /
+BENCH_serve.json records against the committed baselines and fail on a
+steady-state slowdown of a compiled hot path.
 
     python -m benchmarks.check_regression \
         --fresh BENCH_protocol.json \
@@ -148,6 +148,27 @@ def compare_train(fresh: dict, baseline: dict,
                   "BENCH_train.json)")
 
 
+def compare_serve(fresh: dict, baseline: dict,
+                  factor: float = 2.0) -> list:
+    """Gate for the streaming-service record (BENCH_serve.json,
+    benchmarks/serve_bench.py): steady-state round wall time at the
+    largest fleet and its same-machine cold->steady compile
+    amortization; ``ok=false`` (a service step or buffer writer traced
+    more than once across a multi-flush run) fails outright."""
+    return _two_signal_gate(
+        fresh, baseline, factor,
+        setting_keys=("fleets", "p", "rounds", "agg", "eps",
+                      "ingest_block"),
+        wall_key="serve_steady_s", speedup_key="speedup_steady",
+        label="streaming serve",
+        speedup_label="cold->steady compile amortization",
+        ok_msg="the serving step retraced: compile-once violated",
+        regen_cmd="python -m benchmarks.serve_bench --fast && "
+                  "cp BENCH_serve.json benchmarks/baselines/"
+                  "BENCH_serve_fast.json (then git checkout "
+                  "BENCH_serve.json)")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", default="BENCH_protocol.json")
@@ -167,6 +188,11 @@ def main(argv=None) -> int:
                          "train-step gate)")
     ap.add_argument("--baseline-train",
                     default="benchmarks/baselines/BENCH_train_fast.json")
+    ap.add_argument("--fresh-serve", default=None,
+                    help="fresh BENCH_serve.json (omit to skip the "
+                         "streaming-serve gate)")
+    ap.add_argument("--baseline-serve",
+                    default="benchmarks/baselines/BENCH_serve_fast.json")
     ap.add_argument("--factor", type=float, default=2.0,
                     help="max tolerated slowdown (default 2x)")
     args = ap.parse_args(argv)
@@ -195,6 +221,13 @@ def main(argv=None) -> int:
         with open(args.baseline_train) as f:
             baseline_train = json.load(f)
         failures += compare_train(fresh_train, baseline_train,
+                                  factor=args.factor)
+    if args.fresh_serve:
+        with open(args.fresh_serve) as f:
+            fresh_serve = json.load(f)
+        with open(args.baseline_serve) as f:
+            baseline_serve = json.load(f)
+        failures += compare_serve(fresh_serve, baseline_serve,
                                   factor=args.factor)
     for msg in failures:
         print(f"REGRESSION: {msg}", file=sys.stderr)

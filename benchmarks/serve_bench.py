@@ -1,0 +1,126 @@
+"""Streaming aggregation service throughput: continuous batching at
+fleet scale.
+
+One :class:`repro.serve.AggregationService` per fleet size m — ingest of
+m machine p-vectors through compiled block writes into the
+device-resident ring buffer, then the single compiled masked-aggregation
+step (registry rule + DP noise + ledger + model update) per round. The
+benchmark measures the cold first round (including compilation) and the
+steady-state rounds, reporting ingest-to-update latency and updates/sec
+per fleet, and asserts the compile-once contract: across an entire
+multi-round run each service must trace its step exactly once.
+
+Writes BENCH_serve.json at the repo root:
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --fast
+
+The nightly pipeline compares the record against the committed
+benchmarks/baselines/BENCH_serve_fast.json via check_regression.py
+(fifth gate): steady-state wall-clock at the largest fleet AND the
+same-machine cold->steady amortization ratio must both regress >2x to
+fail, so machine speed cancels out.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.keys import stream_key
+from repro.serve import AggregationService, ServeConfig
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(_REPO_ROOT, "BENCH_serve.json")
+
+FLEETS = (64, 1024, 16384)
+
+
+def _fleet_record(m: int, p: int, rounds: int, agg: str, eps: float,
+                  ingest_block: int, seed: int) -> dict:
+    cfg = ServeConfig(method=agg, capacity=m, eps=eps, dp_n=100,
+                      lr=0.1, ingest_block=min(ingest_block, m),
+                      seed=seed)
+    svc = AggregationService(jnp.zeros(p, jnp.float32), cfg)
+    data_key = stream_key(seed, "data")
+    batches = [jax.random.normal(jax.random.fold_in(data_key, r), (m, p))
+               for r in range(rounds)]
+    jax.block_until_ready(batches)
+
+    t0 = time.perf_counter()
+    svc.submit_many(batches[0])          # capacity trigger flushes round 0
+    t_cold = time.perf_counter() - t0    # includes every compile
+
+    t0 = time.perf_counter()
+    for r in range(1, rounds):
+        svc.submit_many(batches[r])
+    t_steady = (time.perf_counter() - t0) / max(1, rounds - 1)
+
+    assert svc.round_idx == rounds, (svc.round_idx, rounds)
+    lat = [h["latency_s"] for h in svc.history[1:]] or \
+        [svc.history[0]["latency_s"]]
+    return {
+        "m": m,
+        "cold_s": t_cold,
+        "steady_s": t_steady,
+        "updates_per_s": m / t_steady,
+        "ingest_to_update_ms": 1e3 * sum(lat) / len(lat),
+        "traces": svc.trace_counts,
+        # compile-once per service: one step trace, at most one trace per
+        # buffer writer, across the whole multi-flush run
+        "ok": svc.trace_counts["step"] == 1
+        and svc.trace_counts["write"] <= 1
+        and svc.trace_counts["write_block"] <= 1,
+    }
+
+
+def measure(fleets=FLEETS, p: int = 10, rounds: int = 4,
+            agg: str = "dcq_mad", eps: float = 1.0,
+            ingest_block: int = 1024, seed: int = 0) -> dict:
+    per_fleet = [_fleet_record(m, p, rounds, agg, eps, ingest_block, seed)
+                 for m in fleets]
+    top = per_fleet[-1]                  # the largest fleet is the gate
+    return {
+        "setting": {"fleets": list(fleets), "p": p, "rounds": rounds,
+                    "agg": agg, "eps": eps, "ingest_block": ingest_block,
+                    "device": jax.devices()[0].platform,
+                    "jax": jax.__version__},
+        "per_fleet": per_fleet,
+        "serve_cold_s": top["cold_s"],
+        "serve_steady_s": top["steady_s"],
+        "speedup_steady": top["cold_s"] / top["steady_s"],
+        "updates_per_s": top["updates_per_s"],
+        "traces": max(f["traces"]["step"] for f in per_fleet),
+        "ok": all(f["ok"] for f in per_fleet),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fleets", type=int, nargs="*", default=list(FLEETS))
+    ap.add_argument("--p", type=int, default=10)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--agg", default="dcq_mad")
+    ap.add_argument("--eps", type=float, default=1.0)
+    ap.add_argument("--ingest-block", type=int, default=1024)
+    ap.add_argument("--fast", action="store_true",
+                    help="nightly/baseline setting (4 rounds, the "
+                    "standard fleet ladder)")
+    ap.add_argument("--out", default=BENCH_PATH)
+    args = ap.parse_args(argv)
+    fleets = list(FLEETS) if args.fast else args.fleets
+    rounds = 4 if args.fast else args.rounds
+    record = measure(fleets=fleets, p=args.p, rounds=rounds, agg=args.agg,
+                     eps=args.eps, ingest_block=args.ingest_block)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+    print(json.dumps(record, indent=1))
+    print(f"wrote {args.out}")
+    return 0 if record["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,70 +1,71 @@
-"""Batched serving example: prefill a batch of prompts with the chunked
-flash path, then decode with the KV/state cache — across architecture
-families (dense KV cache, hybrid SSM+shared-attention cache, xLSTM
-matrix-memory state).
+"""Continuous-batching example: the streaming aggregation service.
 
-    PYTHONPATH=src python examples/serve_batched.py --gen 24
+Machine updates stream in asynchronously and a single compiled step —
+one trace for the whole run — serves a robust-DP model update every
+time the flush policy fires. Three scenes:
+
+  1. full fleets: capacity-triggered flushes, bulk block ingest;
+  2. stragglers: a partial fleet flushed by an explicit deadline-style
+     flush — same executable, the fill level is a traced scalar;
+  3. backpressure: a policy that never auto-flushes, rejecting
+     arrivals once the ring buffer is full.
+
+    PYTHONPATH=src python examples/serve_batched.py
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.models.model import Model
-
-
-def serve(arch: str, batch: int, prompt_len: int, gen: int):
-    cfg = get_config(arch, reduced=True)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    max_len = prompt_len + gen
-    cache = model.init_cache(batch, max_len)
-    key = jax.random.PRNGKey(1)
-    if cfg.family == "audio":
-        prompt = jax.random.randint(key, (batch, prompt_len,
-                                          cfg.n_codebooks), 0, cfg.vocab)
-    else:
-        prompt = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)
-
-    step = jax.jit(model.decode_step)
-    t0 = time.time()
-    logits = None
-    for t in range(prompt_len):
-        tok = prompt[:, t:t + 1]
-        logits, cache = step(params, cache, {"tokens": tok})
-    t_pre = time.time() - t0
-
-    tok = jnp.argmax(logits[:, -1], axis=-1)
-    out = [tok]
-    t0 = time.time()
-    for _ in range(gen - 1):
-        t = tok[:, None]
-        if cfg.family == "audio":
-            t = jnp.tile(t[..., None], (1, 1, cfg.n_codebooks))
-        logits, cache = step(params, cache, {"tokens": t})
-        tok = jnp.argmax(logits[:, -1], axis=-1)
-        out.append(tok)
-    t_gen = time.time() - t0
-    rate = batch * gen / max(t_gen, 1e-9)
-    print(f"  {arch:24s} [{cfg.family:6s}] prefill {t_pre:5.1f}s | "
-          f"decode {rate:7.1f} tok/s | sample: "
-          f"{jnp.stack(out, 1)[0][:8].tolist()}")
+from repro.api import FlushPolicy, serve
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=24)
-    ap.add_argument("--archs", nargs="*",
-                    default=["glm4-9b", "qwen3-moe-30b-a3b", "zamba2-7b",
-                             "xlstm-125m", "musicgen-medium"])
+    ap.add_argument("--machines", type=int, default=256,
+                    help="fleet size per round (ring-buffer capacity)")
+    ap.add_argument("--dim", type=int, default=10,
+                    help="parameter dimension (the paper's p)")
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--agg", default="dcq_mad")
+    ap.add_argument("--eps", type=float, default=2.0)
     args = ap.parse_args(argv)
-    print("=== batched serving across families (reduced configs) ===")
-    for arch in args.archs:
-        serve(arch, args.batch, args.prompt_len, args.gen)
+    m, p = args.machines, args.dim
+    key, key2, key3 = jax.random.split(jax.random.PRNGKey(0), 3)
+
+    print(f"=== scene 1: {args.rounds} full fleets of m={m}, "
+          f"agg={args.agg}, eps={args.eps}/round ===")
+    svc = serve(jnp.zeros(p), method=args.agg, capacity=m,
+                eps=args.eps, lr=0.5, ingest_block=64)
+    for r in range(args.rounds):
+        updates = 1.0 + jax.random.normal(jax.random.fold_in(key, r),
+                                          (m, p))
+        svc.submit_many(updates)     # capacity trigger flushes the round
+        h = svc.history[-1]
+        print(f"  round {h['round']} fill {h['fill']:4d} "
+              f"latency {h['latency_s']*1e3:6.2f} ms  theta[0] "
+              f"{float(svc.theta[0]):+.3f}")
+    print(f"  one executable across the run: traces={svc.trace_counts}")
+    print(f"  privacy spend: basic composition "
+          f"{svc.accountant.total_basic()}")
+
+    print("=== scene 2: stragglers — 40% of the fleet never arrives ===")
+    svc2 = serve(jnp.zeros(p), method=args.agg, capacity=m,
+                 policy=FlushPolicy(capacity_frac=None, min_fill=8))
+    arrived = int(0.6 * m)
+    svc2.submit_many(jax.random.normal(key2, (arrived, p)))
+    svc2.flush()                     # deadline fired: flush the partial fleet
+    print(f"  flushed fill={svc2.history[-1]['fill']} of capacity {m} "
+          f"with the same step (traces={svc2.trace_counts})")
+
+    print("=== scene 3: backpressure — full buffer, no auto-flush ===")
+    svc3 = serve(jnp.zeros(p), method="median", capacity=8,
+                 policy=FlushPolicy(capacity_frac=None,
+                                    backpressure="reject"))
+    accepted = svc3.submit_many(jax.random.normal(key3, (12, p)))
+    print(f"  accepted {accepted}/12, rejected {svc3.rejected} "
+          f"(buffer capacity 8); explicit flush -> "
+          f"{'ok' if svc3.flush() is not None else 'none'}")
 
 
 if __name__ == "__main__":

@@ -39,7 +39,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.agg import kernel, reference
+from repro.agg import kernel, masked, reference
 from repro.agg.kernel import OPS, cq_constants, dcq_pallas, ostat_pallas
 from repro.agg.reference import (ARE_MEDIAN, are_dcq, d_k, dcq, dcq_jit,
                                  dcq_mad_reference, dcq_with_sigma,
@@ -47,19 +47,20 @@ from repro.agg.reference import (ARE_MEDIAN, are_dcq, d_k, dcq, dcq_jit,
                                  median_deviation_variance,
                                  median_mad_dcq_reference, quantile_knots,
                                  quantile_levels, trimmed_mean_agg)
-from repro.agg.registry import (Aggregator, get_aggregator, has_pallas,
-                                register, registered)
+from repro.agg.registry import (Aggregator, get_aggregator, has_masked,
+                                has_pallas, register, registered)
 
 __all__ = [
     "Aggregator", "register", "get_aggregator", "registered", "has_pallas",
-    "aggregate", "aggregate_batched", "median_mad_dcq",
+    "has_masked",
+    "aggregate", "aggregate_batched", "aggregate_masked", "median_mad_dcq",
     "median_deviation_variance",
     "ostat_pallas", "dcq_pallas", "OPS", "cq_constants",
     "dcq", "dcq_with_sigma", "dcq_jit", "dcq_mad_reference",
     "median_mad_dcq_reference", "quantile_levels", "quantile_knots",
     "d_k", "are_dcq", "ARE_MEDIAN",
     "mean_agg", "median_agg", "trimmed_mean_agg", "geometric_median_agg",
-    "kernel", "reference",
+    "kernel", "masked", "reference",
 ]
 
 
@@ -81,21 +82,21 @@ register(Aggregator(
     name="mean",
     reference=lambda values, *, scale=None, K=10, trim_beta=0.2, axis=0:
         reference.mean_agg(values, axis=axis),
-    pallas=_pallas_op("mean"),
+    pallas=_pallas_op("mean"), masked=masked.masked_mean,
     doc="non-robust average (the efficiency yardstick)"))
 
 register(Aggregator(
     name="median",
     reference=lambda values, *, scale=None, K=10, trim_beta=0.2, axis=0:
         reference.median_agg(values, axis=axis),
-    pallas=_pallas_op("median"),
+    pallas=_pallas_op("median"), masked=masked.masked_median,
     doc="coordinate-wise median (Yin et al. 2018)"))
 
 register(Aggregator(
     name="trimmed",
     reference=lambda values, *, scale=None, K=10, trim_beta=0.2, axis=0:
         reference.trimmed_mean_agg(values, beta=trim_beta, axis=axis),
-    pallas=_pallas_op("trimmed"),
+    pallas=_pallas_op("trimmed"), masked=masked.masked_trimmed,
     doc="coordinate-wise beta-trimmed mean (Yin et al. 2018/19)"))
 
 register(Aggregator(
@@ -103,6 +104,7 @@ register(Aggregator(
     reference=lambda values, *, scale=None, K=10, trim_beta=0.2, axis=0:
         reference.geometric_median_agg(values, axis=axis),
     pallas=None, batching="vmap", coordinatewise=False,
+    masked=masked.masked_geomedian,
     doc="geometric median via Weiszfeld (Chen et al. 2017); couples "
         "coordinates, so no Pallas form and payload must stay replicated"))
 
@@ -110,7 +112,7 @@ register(Aggregator(
     name="dcq",
     reference=lambda values, *, scale=None, K=10, trim_beta=0.2, axis=0:
         reference.dcq(values, scale, K=K, axis=axis),
-    pallas=_pallas_op("dcq"), needs_scale=True,
+    pallas=_pallas_op("dcq"), needs_scale=True, masked=masked.masked_dcq,
     doc="the paper's composite-quantile estimator with oracle scale "
         "(§3/§4.4)"))
 
@@ -118,7 +120,7 @@ register(Aggregator(
     name="dcq_mad",
     reference=lambda values, *, scale=None, K=10, trim_beta=0.2, axis=0:
         reference.dcq_mad_reference(values, K=K, axis=axis),
-    pallas=_pallas_op("dcq_mad"),
+    pallas=_pallas_op("dcq_mad"), masked=masked.masked_dcq_mad,
     doc="MAD-self-calibrated DCQ (the gradient-aggregation path, no "
         "transmitted variance)"))
 
@@ -160,6 +162,38 @@ def aggregate(values, method: str = "dcq", scale=None, K: int = 10,
             else jnp.asarray(scale).reshape(1)
     out = agg.pallas(flat, scale=sc, K=K, trim_beta=trim_beta,
                      interpret=interpret)
+    return out.reshape(payload).astype(values.dtype)
+
+
+def aggregate_masked(values, fill, method: str = "dcq", scale=None,
+                     K: int = 10, trim_beta: float = 0.2, axis: int = 0):
+    """Partial-fill aggregation over a fixed-capacity buffer: reduce the
+    first ``fill`` rows of the machine axis, ignoring the stale tail.
+
+    ``fill`` is a (traceable) scalar, never a shape — the serving step
+    compiles ONCE per buffer capacity and every fill level reuses the
+    executable. The result is byte-identical to calling this same entry
+    on the dense unpadded ``values[:fill]`` batch (the fill-invariance
+    contract, see :mod:`repro.agg.masked`); the ``median`` rule is
+    additionally bit-equal to the registry reference at every fill, and
+    the sum-based rules match it up to float summation order.
+    """
+    agg = get_aggregator(method)
+    if agg.masked is None:
+        raise ValueError(f"{method!r} has no masked partial-fill form; "
+                         f"servable rules: "
+                         f"{[n for n in registered() if has_masked(n)]}")
+    if agg.needs_scale and scale is None:
+        raise ValueError(f"{method!r} needs a per-coordinate scale")
+    vals = jnp.moveaxis(values, axis, 0)           # (capacity, *payload)
+    payload = vals.shape[1:]
+    flat = vals.reshape(vals.shape[0], -1) if payload else vals[:, None]
+    sc = None
+    if scale is not None:
+        sc = jnp.broadcast_to(jnp.asarray(scale, vals.dtype),
+                              payload).reshape(-1) if payload \
+            else jnp.asarray(scale, vals.dtype).reshape(1)
+    out = agg.masked(flat, fill, scale=sc, K=K, trim_beta=trim_beta)
     return out.reshape(payload).astype(values.dtype)
 
 

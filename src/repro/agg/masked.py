@@ -1,0 +1,191 @@
+"""Masked partial-fill aggregation: the serving subsystem's numerics.
+
+A streaming ring buffer (repro.serve) holds a fixed-capacity ``(C, p)``
+stack whose first ``fill`` rows are valid machine updates and whose tail
+is stale garbage. A continuously-batched compiled step must aggregate the
+valid prefix under ONE trace — ``fill`` is a traced scalar, never a shape
+— and a half-full buffer must aggregate to EXACTLY what the dense
+unpadded ``(fill, p)`` batch would: stragglers may shrink the batch, they
+must never perturb the estimate.
+
+That exactness is engineered, not assumed. XLA lowers a row-sum to a
+reduction tree whose shape depends on the row count (and on the SIMD lane
+layout), so ``sum(pad_with_zeros(x))`` is NOT bit-equal to ``sum(x)`` in
+float arithmetic. Two primitives restore bit-equality:
+
+  * **block-sequential sums** — every machine-axis sum runs as a
+    sequential ``lax.scan`` over fixed ``BLOCK``-row chunks (invalid rows
+    zeroed, capacity zero-padded to a block multiple, never fewer than
+    two blocks so XLA cannot inline a trip-count-1 loop into a
+    differently-fused graph). Both the buffered and the dense batch
+    reduce with byte-identical per-block HLO; the buffer's extra blocks
+    are all-zero and add exactly 0.0f;
+  * **parity-balanced median padding** — invalid slots are filled with a
+    balanced split of -inf/+inf so the valid entries keep their central
+    rank. ``jnp.median`` interpolates iff the row count is even, so the
+    kernel evaluates a ``C``-row and a ``(C+1)``-row variant and selects
+    the one matching the parity of ``fill`` — making the masked median
+    bit-identical to ``jnp.median(values[:fill])`` itself, at every fill.
+
+Contract (asserted per aggregator in tests/test_serve.py): for every
+registered rule, ``masked(buffer, fill=k)`` == ``masked(buffer[:k],
+fill=k)`` byte-for-byte; the ``median`` rule is additionally bit-equal to
+the registry reference, and every rule matches the registry reference to
+reduction-order rounding (~1e-6), exactly at full fill of a minimal
+buffer. Sum-based rules differ from ``repro.agg.reference`` only in
+summation ORDER (documented here, tested there).
+
+These kernels take the machine axis at 0 and a 2-D ``(C, p)`` payload —
+``repro.agg.aggregate_masked`` and the transport wire flatten pytree
+leaves to that layout, exactly as the Pallas path does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.stats import norm
+
+from repro.agg.reference import (MAD_EPS, MAD_SIGMA, quantile_knots,
+                                 quantile_levels)
+
+__all__ = ["BLOCK", "blocked_sum", "masked_mean", "masked_median",
+           "masked_trimmed", "masked_geomedian", "masked_dcq",
+           "masked_dcq_mad"]
+
+#: rows per sequential sum chunk. Part of the numeric contract: both the
+#: buffered and the dense side chunk identically, so the per-block reduce
+#: trees coincide. 128 keeps the scan short (capacity 16384 -> 128 steps)
+#: while each block sum stays a wide vectorized reduce.
+BLOCK = 128
+
+
+def _blocked(values, fill, row_axis: int = 0):
+    """Sum over ``row_axis`` keeping rows ``< fill``: sequential scan over
+    fixed-size blocks (see module docstring for why this shape)."""
+    m = values.shape[row_axis]
+    n_blocks = max(-(-m // BLOCK), 2)     # >= 2: no trip-count-1 while loop
+    pad = n_blocks * BLOCK - m
+    if pad:
+        pad_shape = list(values.shape)
+        pad_shape[row_axis] = pad
+        values = jnp.concatenate(
+            [values, jnp.zeros(pad_shape, values.dtype)], axis=row_axis)
+    mask_shape = [1] * values.ndim
+    mask_shape[row_axis] = n_blocks * BLOCK
+    mask = (jnp.arange(n_blocks * BLOCK) < fill).reshape(mask_shape)
+    v = jnp.moveaxis(jnp.where(mask, values, 0), row_axis, 0)
+    blocks = v.reshape((n_blocks, BLOCK) + v.shape[1:])
+
+    def body(acc, blk):
+        return acc + jnp.sum(blk, axis=0), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros(v.shape[1:], values.dtype), blocks)
+    return acc
+
+
+def blocked_sum(values, fill):
+    """Masked machine-axis sum ``values[:fill].sum(0)`` with fill-invariant
+    bytes (leading axis; ``fill`` may be traced)."""
+    return _blocked(values, fill, row_axis=0)
+
+
+def _fill_f(fill, dtype):
+    return jnp.asarray(fill).astype(dtype)
+
+
+def _padded_median(values, fill, rows: int):
+    """Median over ``rows`` slots: valid prefix, then a balanced -inf/+inf
+    split. Exact iff ``rows - fill`` is even (the valid entries stay
+    centred and the interpolation weight matches the dense batch's)."""
+    m, p = values.shape
+    if rows > m:
+        values = jnp.concatenate(
+            [values, jnp.zeros((rows - m, p), values.dtype)])
+    i = jnp.arange(rows)[:, None]
+    lo = fill + (rows - fill) // 2
+    padded = jnp.where(i < fill, values,
+                       jnp.where(i < lo, -jnp.inf, jnp.inf))
+    return jnp.median(padded, axis=0)
+
+
+def masked_median(values, fill, *, scale=None, K=10, trim_beta=0.2):
+    """Bit-identical to ``jnp.median(values[:fill], axis=0)`` at every
+    fill: dual C/(C+1)-row padded medians, selected by fill parity."""
+    m = values.shape[0]
+    even = _padded_median(values, fill, m)
+    odd = _padded_median(values, fill, m + 1)
+    return jnp.where((m - fill) % 2 == 0, even, odd)
+
+
+def masked_mean(values, fill, *, scale=None, K=10, trim_beta=0.2):
+    return blocked_sum(values, fill) * (1.0 / _fill_f(fill, values.dtype))
+
+
+def masked_trimmed(values, fill, *, scale=None, K=10, trim_beta=0.2):
+    """beta-trimmed mean of the valid prefix: +inf fill sinks invalid rows
+    to the tail of the sort (comparison-only, so the valid sorted prefix
+    is bit-equal to sorting the dense batch), then a window sum.
+
+    The trim count ``floor(beta * fill)`` is computed in the payload
+    dtype (fill is traced); for beta where ``beta * m`` lands exactly on
+    an integer this can differ by one row from the reference's host-side
+    ``int(beta * m)`` — the registered default 0.2 never does for f32.
+    Any ``beta < 0.5`` keeps the window non-empty at every fill >= 1.
+    """
+    if not trim_beta < 0.5:
+        raise ValueError(f"trim fraction {trim_beta} too large: the "
+                         "masked window must stay non-empty at fill 1")
+    m = values.shape[0]
+    i = jnp.arange(m)[:, None]
+    srt = jnp.sort(jnp.where(i < fill, values, jnp.inf), axis=0)
+    g = jnp.floor(trim_beta * _fill_f(fill, values.dtype)).astype(jnp.int32)
+    window = (i >= g) & (i < fill - g)
+    kept = jnp.where(window, srt, 0.0)
+    total = blocked_sum(kept, jnp.int32(m))       # window already zeroed
+    return total * (1.0 / (fill - 2 * g).astype(values.dtype))
+
+
+def masked_geomedian(values, fill, *, scale=None, K=10, trim_beta=0.2,
+                     iters: int = 50, eps: float = 1e-8):
+    """Weiszfeld over the valid prefix: invalid rows are zeroed BEFORE the
+    distance pass (0 * garbage would resurrect NaNs) and their weights
+    forced to 0, so they never pull the iterate."""
+    m = values.shape[0]
+    valid = jnp.arange(m) < fill
+    flat = jnp.where(valid[:, None], values.reshape(m, -1), 0.0)
+
+    def step(z, _):
+        d = jnp.linalg.norm(flat - z[None], axis=1)
+        w = jnp.where(valid, 1.0 / jnp.maximum(d, eps), 0.0)
+        num = blocked_sum(w[:, None] * flat, jnp.int32(m))
+        return num / blocked_sum(w, jnp.int32(m)), None
+
+    z0 = masked_median(flat, fill)
+    z, _ = jax.lax.scan(step, z0, None, length=iters)
+    return z.reshape(values.shape[1:])
+
+
+def masked_dcq(values, fill, *, scale=None, K=10, trim_beta=0.2):
+    """DCQ with oracle scale over the valid prefix (reference.dcq with
+    masked median anchor and block-sequential indicator sums; the machine
+    count in the denominator is the traced fill)."""
+    med = masked_median(values, fill)
+    delta = quantile_knots(K).astype(values.dtype)
+    kappa = quantile_levels(K).astype(values.dtype)
+    thr = med[None] + scale[None] * delta.reshape((K,) + (1,) * med.ndim)
+    ind = (values[None, :] <= thr[:, None]).astype(values.dtype)  # (K, C, p)
+    contrib = ind - kappa.reshape((K, 1, 1))
+    s = jnp.sum(_blocked(contrib, fill, row_axis=1), axis=0)
+    denom = _fill_f(fill, values.dtype) \
+        * norm.pdf(delta).sum().astype(values.dtype)
+    return med - scale * s / denom
+
+
+def masked_dcq_mad(values, fill, *, scale=None, K=10, trim_beta=0.2):
+    """MAD-self-calibrated DCQ (the gradient/serving wire carries no
+    variance estimates); f32 like the reference and the Pallas kernel."""
+    values = values.astype(jnp.float32)
+    med = masked_median(values, fill)
+    mad = masked_median(jnp.abs(values - med[None]), fill)
+    mad_scale = MAD_SIGMA * mad + MAD_EPS
+    return masked_dcq(values, fill, scale=mad_scale, K=K)

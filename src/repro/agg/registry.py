@@ -42,6 +42,11 @@ class Aggregator:
     #: "grid"  — coordinate-wise; leading batch axes ride the Pallas grid.
     #: "vmap"  — not coordinate-wise; batch via outer vmap of reference.
     batching: str = "grid"
+    #: ``masked(values, fill, *, scale, K, trim_beta)`` — partial-fill form
+    #: over a fixed-capacity ``(C, p)`` buffer whose first ``fill`` (traced)
+    #: rows are valid; byte-identical to itself on the dense unpadded batch
+    #: (repro.agg.masked). ``None`` = rule not servable from a ring buffer.
+    masked: Optional[Callable] = None
     #: True when the rule consumes a per-coordinate scale (protocol DCQ).
     needs_scale: bool = False
     #: coordinate-wise rules commute with payload sharding (collectives.py)
@@ -75,3 +80,7 @@ def registered() -> Tuple[str, ...]:
 
 def has_pallas(name: str) -> bool:
     return get_aggregator(name).pallas is not None
+
+
+def has_masked(name: str) -> bool:
+    return get_aggregator(name).masked is not None

@@ -1,0 +1,129 @@
+"""``repro.api`` — the stable public surface of this repository.
+
+One import gives the four things a user of the reproduction actually
+does, decoupled from the internal package layout (which this facade is
+free to keep stable across refactors — tests/test_api.py snapshots the
+surface and CI fails on any break):
+
+  * :func:`run_protocol`     — one replicate of the paper's Algorithm 1
+    (DP quasi-Newton robust estimation) over pre-sharded data;
+  * :func:`run_monte_carlo`  — the batched replicate driver (one compiled
+    vmap over PRNG keys);
+  * :func:`run_sweep`        — the scenario-sweep engine over the paper's
+    experiment grid, by preset name or explicit scenario list;
+  * :func:`serve`            — the streaming aggregation service
+    (continuous batching over a fixed-capacity ring buffer).
+
+plus the registry views (:func:`registered_aggregators`,
+:func:`registered_attacks`) and the config/result types those entry
+points consume. Internal modules (``repro.core.*``, ``repro.agg.*``,
+``repro.sweep.*``) remain importable but are NOT covered by the
+stability promise; the deprecated PR1-era shims (``core/robust_agg``,
+``core/dcq``, ``core/byzantine``, ``kernels/dcq*``) warn and will be
+removed.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro import agg as _agg
+from repro import attacks as _attacks
+from repro.configs.base import ProtocolConfig
+from repro.core.losses import MEstimationProblem, get_problem
+from repro.core.protocol import DPQNProtocol, ProtocolResult
+from repro.serve import AggregationService, FlushPolicy, RingBuffer, \
+    ServeConfig
+
+__all__ = [
+    "run_protocol", "run_monte_carlo", "run_sweep", "serve",
+    "registered_aggregators", "registered_attacks",
+    "ProtocolConfig", "ProtocolResult", "DPQNProtocol",
+    "MEstimationProblem", "get_problem",
+    "AggregationService", "ServeConfig", "FlushPolicy", "RingBuffer",
+]
+
+
+def run_protocol(X, y, problem: Any = "logistic",
+                 cfg: Optional[ProtocolConfig] = None,
+                 key: Optional[jax.Array] = None, seed: int = 0,
+                 **kwargs) -> ProtocolResult:
+    """One replicate of Algorithm 1 over pre-sharded data.
+
+    ``X``: (m+1, n, p), ``y``: (m+1, n) — machine 0 is the central
+    processor. ``problem`` is a registered loss name or an
+    :class:`MEstimationProblem`; ``cfg`` defaults to the paper's
+    :class:`ProtocolConfig`. Extra keyword arguments (``byz_mask``,
+    ``attack``, ``attack_factor``, ``theta0``, ...) forward to
+    :meth:`DPQNProtocol.run`.
+    """
+    prob = get_problem(problem) if isinstance(problem, str) else problem
+    proto = DPQNProtocol(prob, cfg if cfg is not None else ProtocolConfig())
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    return proto.run(key, X, y, **kwargs)
+
+
+def run_monte_carlo(X, y, reps: int = 100, problem: Any = "logistic",
+                    cfg: Optional[ProtocolConfig] = None,
+                    keys: Optional[jax.Array] = None, seed: int = 0,
+                    **kwargs):
+    """Batched Monte-Carlo replicates of Algorithm 1: one compiled vmap
+    over the replicate keys. Returns a ``ProtocolArrays`` whose every
+    field has a leading replicate axis (``theta_qn``: (reps, p))."""
+    prob = get_problem(problem) if isinstance(problem, str) else problem
+    proto = DPQNProtocol(prob, cfg if cfg is not None else ProtocolConfig())
+    if keys is None:
+        keys = jax.random.split(jax.random.PRNGKey(seed), reps)
+    return proto.run_monte_carlo(keys, X, y, **kwargs)
+
+
+def run_sweep(scenarios: Any = "smoke", fast: bool = False,
+              artifact_path: Optional[str] = None, **kwargs) -> dict:
+    """Run a scenario sweep and return its artifact dict.
+
+    ``scenarios`` is a preset name (see ``repro.sweep.PRESETS``) or an
+    iterable of ``Scenario`` objects; ``fast=True`` runs the reduced-
+    replicate CI variant of a preset. Extra keyword arguments (``mesh``,
+    ``resume``, ``chunk_size``, ...) forward to
+    ``repro.sweep.run_scenarios``.
+    """
+    from repro import sweep as _sweep   # heavy import kept lazy
+    if isinstance(scenarios, str):
+        scens = _sweep.build_preset(scenarios)
+    else:
+        scens = list(scenarios)
+    if fast:
+        scens = _sweep.fast_variant(scens)
+    return _sweep.run_scenarios(scens, artifact_path=artifact_path,
+                                **kwargs)
+
+
+def serve(theta: Any, cfg: Optional[ServeConfig] = None,
+          policy: Optional[FlushPolicy] = None,
+          sharding: Optional[Any] = None,
+          **cfg_kwargs) -> AggregationService:
+    """Stand up a streaming aggregation service around a model.
+
+    ``theta`` is the served model (flat parameter vector or pytree).
+    Pass a full :class:`ServeConfig`, or its fields directly as keyword
+    arguments (``serve(theta, method="median", capacity=4096, eps=1.0)``).
+    Returns a live :class:`AggregationService`; feed it with
+    ``submit``/``submit_many``, tick ``poll`` for deadline flushes.
+    """
+    if cfg is not None and cfg_kwargs:
+        raise ValueError("pass either cfg or ServeConfig fields, not both")
+    if cfg is None:
+        cfg = ServeConfig(**cfg_kwargs)
+    return AggregationService(theta, cfg, policy=policy, sharding=sharding)
+
+
+def registered_aggregators() -> tuple:
+    """Names of every registered robust-aggregation rule."""
+    return _agg.registered()
+
+
+def registered_attacks() -> tuple:
+    """Names of every registered Byzantine attack."""
+    return _attacks.registered()

@@ -1,10 +1,12 @@
 """The paper's contribution: DCQ aggregation + DP quasi-Newton protocol.
 
-Aggregation lives in ``repro.agg`` (registry + reference + Pallas kernel);
-the historical names are re-exported here unchanged.
+Aggregation lives in ``repro.agg`` (registry + reference + Pallas kernel)
+and the threat models in ``repro.attacks``; the historical names
+(``aggregate``, the ``byzantine`` module) are still reachable here but
+resolve lazily through their deprecated shims — ``import repro.core``
+itself stays warning-free, only touching the legacy names warns.
 """
 from repro.agg import dcq, dcq_with_sigma, d_k, are_dcq, ARE_MEDIAN
-from repro.core.robust_agg import aggregate
 from repro.core.protocol import (DPQNProtocol, ProtocolArrays, ProtocolResult,
                                  ProtocolTreeArrays, calibrate_sigma_base,
                                  monte_carlo_mrse, n_transmissions,
@@ -12,7 +14,7 @@ from repro.core.protocol import (DPQNProtocol, ProtocolArrays, ProtocolResult,
                                  round_budget, transmission_names,
                                  vmap_machines)
 from repro.core.losses import get_problem, PROBLEMS
-from repro.core import dp, bfgs, byzantine, local, baselines, transport
+from repro.core import dp, bfgs, local, baselines, transport
 
 __all__ = ["dcq", "dcq_with_sigma", "d_k", "are_dcq", "ARE_MEDIAN",
            "aggregate", "DPQNProtocol", "ProtocolArrays", "ProtocolResult",
@@ -22,3 +24,16 @@ __all__ = ["dcq", "dcq_with_sigma", "d_k", "are_dcq", "ARE_MEDIAN",
            "n_transmissions", "monte_carlo_mrse", "vmap_machines",
            "get_problem", "PROBLEMS", "dp", "bfgs", "byzantine", "local",
            "baselines", "transport"]
+
+
+def __getattr__(name):
+    # PEP 562 lazy resolution of the deprecated legacy names: the shim
+    # modules fire a DeprecationWarning on first import, so they must not
+    # load as a side effect of `import repro.core`.
+    if name == "aggregate":
+        from repro.core.robust_agg import aggregate
+        return aggregate
+    if name == "byzantine":
+        import importlib
+        return importlib.import_module("repro.core.byzantine")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

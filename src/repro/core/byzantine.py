@@ -8,6 +8,13 @@ See README "Threat models" for the registry table.
 """
 from __future__ import annotations
 
-from repro.attacks import (apply_attack, byzantine_mask,  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.byzantine is deprecated; use the repro.attacks registry "
+    "(repro.attacks.apply_attack / repro.attacks.byzantine_mask) instead",
+    DeprecationWarning, stacklevel=2)
+
+from repro.attacks import (apply_attack, byzantine_mask,  # noqa: F401,E402
                            gaussian_attack, random_value_attack,
                            scaling_attack, sign_flip_attack)

@@ -7,7 +7,14 @@ historical names so pinned imports keep working.
 """
 from __future__ import annotations
 
-from repro.agg.reference import (ARE_MEDIAN, are_dcq, d_k, dcq,  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.dcq is deprecated; use repro.agg "
+    "(repro.agg.dcq / repro.agg.reference) instead",
+    DeprecationWarning, stacklevel=2)
+
+from repro.agg.reference import (ARE_MEDIAN, are_dcq, d_k, dcq,  # noqa: F401,E402
                                  dcq_jit, dcq_with_sigma, quantile_knots,
                                  quantile_levels)
 

@@ -7,7 +7,14 @@ working. See README "repro.agg" for the migration note.
 """
 from __future__ import annotations
 
-from repro.agg.reference import (geometric_median_agg, mean_agg,  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.robust_agg is deprecated; use the repro.agg registry "
+    "(repro.agg.aggregate / repro.agg.reference) instead",
+    DeprecationWarning, stacklevel=2)
+
+from repro.agg.reference import (geometric_median_agg, mean_agg,  # noqa: F401,E402
                                  median_agg, trimmed_mean_agg)
 
 

@@ -168,7 +168,8 @@ def wire_corrupt(key: Optional[jax.Array], values: Any,
 
 def wire_aggregate(values: Any, method: str, scale: Any = None,
                    K: int = 10, trim_beta: float = 0.2,
-                   backend: Optional[str] = None) -> Any:
+                   backend: Optional[str] = None,
+                   fill: Optional[Any] = None) -> Any:
     """Robust aggregation of the leading machine axis, per leaf, through
     the ``repro.agg`` registry.
 
@@ -177,7 +178,23 @@ def wire_aggregate(values: Any, method: str, scale: Any = None,
     kernels only ever see 2-D tiles — and the aggregate is reshaped back
     to ``payload``. Single arrays pass through at their native shape
     (bit-identical to the historical flat path).
+
+    ``fill`` (the serving path): when given, the leading axis is a
+    fixed-capacity ring buffer whose first ``fill`` (traced scalar) rows
+    are valid, and dispatch routes to ``repro.agg.aggregate_masked`` —
+    byte-identical to aggregating the dense unpadded prefix, at one trace
+    per capacity. ``backend`` does not apply to the masked path.
     """
+    if fill is not None:
+        if not isinstance(values, (dict, list, tuple)):
+            return agg.aggregate_masked(values, fill, method=method,
+                                        scale=scale, K=K,
+                                        trim_beta=trim_beta, axis=0)
+        leaves, treedef = jax.tree_util.tree_flatten(values)
+        out = [agg.aggregate_masked(leaf, fill, method=method, scale=sc,
+                                    K=K, trim_beta=trim_beta, axis=0)
+               for leaf, sc in zip(leaves, _match(values, scale))]
+        return jax.tree_util.tree_unflatten(treedef, out)
     if not isinstance(values, (dict, list, tuple)):
         # plain (m, p) array: the historical flat call, verbatim —
         # guarantees the refactored protocol_rounds is byte-identical.

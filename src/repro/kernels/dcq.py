@@ -7,6 +7,13 @@ generalized batched order-statistics kernel in ``repro.agg.kernel``
 """
 from __future__ import annotations
 
-from repro.agg.kernel import N_BISECT, dcq_pallas  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.kernels.dcq is deprecated; use repro.agg "
+    "(repro.agg.dcq_pallas / repro.agg.ostat_pallas) instead",
+    DeprecationWarning, stacklevel=2)
+
+from repro.agg.kernel import N_BISECT, dcq_pallas  # noqa: F401,E402
 
 __all__ = ["dcq_pallas", "N_BISECT"]

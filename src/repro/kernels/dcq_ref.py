@@ -4,6 +4,14 @@ for the ``"dcq_mad"`` aggregator).
 """
 from __future__ import annotations
 
-from repro.agg.reference import dcq_mad_reference  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.kernels.dcq_ref is deprecated; use "
+    "repro.agg.dcq_mad_reference (the 'dcq_mad' registry reference) "
+    "instead",
+    DeprecationWarning, stacklevel=2)
+
+from repro.agg.reference import dcq_mad_reference  # noqa: F401,E402
 
 __all__ = ["dcq_mad_reference"]

@@ -1,0 +1,39 @@
+"""Shared CLI flags for the launchers (train / serve).
+
+Both launchers address the same model zoo and the same reproducibility
+and placement knobs; this module is the single definition of those
+flags so ``python -m repro.launch.train --help`` and
+``... launch.serve --help`` never drift apart on them.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def add_common_flags(ap: argparse.ArgumentParser,
+                     arch_default: str = "xlstm-125m"
+                     ) -> argparse.ArgumentParser:
+    """The flags every launcher shares: model selection, root seed,
+    device placement."""
+    ap.add_argument("--config", "--arch", dest="arch", default=arch_default,
+                    help="model-zoo config name (repro.configs.ARCHS)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="root seed; per-purpose keys are derived as "
+                    "independent fold_in streams (repro.core.keys)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the machine axis over all visible devices")
+    return ap
+
+
+def machine_mesh(n_machines: int):
+    """A 1-D device mesh over the machine axis, validating divisibility
+    (pair with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on
+    CPU)."""
+    import jax
+
+    from repro.compat import make_mesh
+    n_dev = jax.device_count()
+    if n_machines % n_dev:
+        raise SystemExit(f"--machines {n_machines} does not divide over "
+                         f"{n_dev} devices")
+    return make_mesh((n_dev,), ("machines",))

@@ -33,6 +33,7 @@ from repro.core.keys import stream_key
 from repro.configs.base import TreeProtocolConfig
 from repro.data.lm import synthetic_lm_batches
 from repro.dist.grad_agg import GradAggConfig
+from repro.launch.cli import add_common_flags, machine_mesh
 from repro.models.model import Model
 from repro.train.optimizer import AdamW
 from repro.train.trainer import (QNTrainConfig, QNTrainer, TrainConfig,
@@ -42,15 +43,10 @@ from repro.train.trainer import (QNTrainConfig, QNTrainer, TrainConfig,
 def build_parser() -> argparse.ArgumentParser:
     """The launcher CLI; --attack accepts every registered repro.attacks
     name plus the historical aliases (resolved by the registry)."""
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--config", "--arch", dest="arch", default="xlstm-125m",
-                    help="model-zoo config name (repro.configs.ARCHS)")
+    ap = add_common_flags(argparse.ArgumentParser())
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--seed", type=int, default=0,
-                    help="root seed; init/data/protocol keys are derived "
-                    "as independent fold_in streams (repro.core.keys)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--machines", type=int, default=4)
@@ -76,8 +72,6 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--hist", type=int, default=5,
                     help="L-BFGS memory length (qn path)")
-    ap.add_argument("--sharded", action="store_true",
-                    help="shard the machine axis over all visible devices")
     ap.add_argument("--ckpt", default="")
     return ap
 
@@ -96,13 +90,9 @@ def main(argv=None):
 
     mesh = None
     if args.sharded:
-        from repro.compat import make_mesh
-        n_dev = jax.device_count()
-        if args.machines % n_dev:
-            raise SystemExit(f"--machines {args.machines} does not divide "
-                             f"over {n_dev} devices")
-        mesh = make_mesh((n_dev,), ("machines",))
-        print(f"[train] machine axis sharded over {n_dev} device(s)")
+        mesh = machine_mesh(args.machines)
+        print(f"[train] machine axis sharded over "
+              f"{jax.device_count()} device(s)")
 
     attack = args.attack if args.byzantine > 0 else "none"
     if args.optimizer == "qn":

@@ -1,0 +1,30 @@
+"""``repro.serve`` — streaming aggregation service (continuous batching).
+
+The serving counterpart of the training protocol: machine updates
+stream in asynchronously, a fixed-capacity device-resident
+:class:`RingBuffer` absorbs them with compiled donated writes, and one
+compiled step — a single trace for the service lifetime, with the fill
+level as a traced scalar — runs registry-backed masked robust
+aggregation plus the DP spend ledger and the model update whenever the
+:class:`FlushPolicy` fires (buffer full, deadline, or explicit flush).
+
+Entry points:
+
+  * :class:`AggregationService` — the service loop (submit / poll /
+    flush over a model pytree or flat parameter vector);
+  * :class:`ServeConfig`       — static step configuration (rule, DP
+    budget, learning rate, ingest block);
+  * :class:`FlushPolicy`       — when buffered updates become a round;
+  * :class:`RingBuffer`        — the device-resident ingest buffer.
+
+The masked partial-fill kernels live in :mod:`repro.agg.masked` and are
+byte-identical to the dense unpadded path per registered aggregator.
+"""
+from __future__ import annotations
+
+from repro.serve.buffers import RingBuffer
+from repro.serve.flush import FlushPolicy
+from repro.serve.service import AggregationService, ServeConfig
+
+__all__ = ["AggregationService", "ServeConfig", "FlushPolicy",
+           "RingBuffer"]

@@ -1,0 +1,107 @@
+"""Fixed-capacity device-resident ring buffers for streaming ingest.
+
+One buffer slot per machine update: a pytree of ``(capacity, *leaf)``
+device arrays plus a host-side cursor. Ingest is write-only and
+compiled — a single-row writer and a fixed-size block writer, both
+jitted ONCE with the buffer arrays donated, so every arrival is an
+in-place device write with no host round-trip of the payload and no
+retrace (the write position is a traced scalar).
+
+Invariant consumed by the masked aggregation step: the valid rows are
+always the contiguous prefix ``[0, fill)``. Below capacity the cursor
+IS the fill; at capacity the cursor wraps (ring semantics — the oldest
+row is overwritten) and every slot stays valid, so the prefix invariant
+holds in both regimes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["RingBuffer"]
+
+
+class RingBuffer:
+    """Device-resident ``(capacity, *leaf)`` stack with compiled writers.
+
+    ``template`` is one machine update (a pytree of arrays or
+    ``jax.ShapeDtypeStruct``s); ``block`` is the batch-ingest chunk size
+    (one compiled write per ``block`` arrivals on the bulk path).
+    ``sharding`` (optional) places the buffer arrays — e.g. a
+    ``NamedSharding`` over the capacity axis for multi-device fleets.
+    """
+
+    def __init__(self, template: Any, capacity: int, block: int = 64,
+                 sharding: Optional[Any] = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.block = max(1, min(int(block), self.capacity))
+        self.cursor = 0          # total writes since reset (never > needed)
+        self.trace_counts = {"write": 0, "write_block": 0}
+
+        def alloc(leaf):
+            shape = (self.capacity,) + tuple(leaf.shape)
+            arr = jnp.zeros(shape, leaf.dtype)
+            return jax.device_put(arr, sharding) if sharding is not None \
+                else arr
+        self.arrays = jax.tree_util.tree_map(alloc, template)
+
+        def write(arrays, row, idx):
+            self.trace_counts["write"] += 1       # runs at trace time only
+            return jax.tree_util.tree_map(
+                lambda buf, x: buf.at[idx].set(x), arrays, row)
+
+        def write_block(arrays, rows, start, idx):
+            # rows: (n, *leaf) with n static; carve [start, start+block)
+            # with a traced start so ONE executable serves every offset.
+            self.trace_counts["write_block"] += 1
+            def upd(buf, full):
+                chunk = jax.lax.dynamic_slice_in_dim(full, start,
+                                                     self.block, axis=0)
+                return jax.lax.dynamic_update_slice_in_dim(buf, chunk,
+                                                           idx, axis=0)
+            return jax.tree_util.tree_map(upd, arrays, rows)
+
+        # donate the buffer arrays: XLA aliases the output into the donated
+        # input pages, so steady-state ingest mutates the buffer in place.
+        self._write = jax.jit(write, donate_argnums=0)
+        self._write_block = jax.jit(write_block, donate_argnums=0)
+
+    @property
+    def fill(self) -> int:
+        """Number of valid rows (the contiguous prefix)."""
+        return min(self.cursor, self.capacity)
+
+    @property
+    def full(self) -> bool:
+        return self.cursor >= self.capacity
+
+    def push(self, update: Any) -> int:
+        """Write one machine update; at capacity the ring wraps onto the
+        oldest slot (the caller's backpressure policy decides whether this
+        is ever reached). Returns the slot index written."""
+        idx = self.cursor % self.capacity
+        self.arrays = self._write(self.arrays, update, jnp.int32(idx))
+        self.cursor += 1
+        return idx
+
+    def push_block(self, rows: Any, start: int) -> None:
+        """Write ``block`` rows taken from ``rows[start:start+block]`` at
+        the cursor. Bulk-ingest fast path; the caller guarantees the
+        buffer has ``block`` slots of room (no wrap mid-block)."""
+        if self.fill + self.block > self.capacity:
+            raise ValueError("push_block needs room for a full block; "
+                             f"fill={self.fill} block={self.block} "
+                             f"capacity={self.capacity}")
+        self.arrays = self._write_block(self.arrays, rows,
+                                        jnp.int32(start),
+                                        jnp.int32(self.cursor))
+        self.cursor += self.block
+
+    def reset(self) -> None:
+        """Start a new round: the stale rows stay in place — the masked
+        aggregation step never reads past ``fill``."""
+        self.cursor = 0

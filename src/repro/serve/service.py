@@ -1,0 +1,246 @@
+"""The streaming aggregation service: continuous batching for huge fleets.
+
+Machine updates (Algorithm-1 p-vectors or gradient pytrees) arrive
+asynchronously via :meth:`AggregationService.submit` / ``submit_many``,
+land in a fixed-capacity device-resident :class:`RingBuffer`, and a
+continuously-batched compiled step — ONE trace for the whole service
+lifetime — runs whenever the :class:`FlushPolicy` fires (buffer full,
+deadline, or explicit ``flush()``):
+
+    noise (central DP, per-leaf calibrated)  ->  masked robust
+    aggregation over the valid prefix (repro.agg registry, byte-identical
+    to the dense unpadded batch)  ->  theta <- theta - lr * aggregate
+
+``fill`` enters the step as a traced scalar, so a half-full deadline
+flush and a full capacity flush share the executable; ``theta`` is
+donated (updated in place), and ingest writes are donated device writes
+(buffers.py). Every served round appends to the DP spend ledger — one
+composition entry on the :class:`PrivacyAccountant` and per-leaf
+``{transmission, leaf, dim, sigma, eps, delta}`` records, mirroring the
+training path's ``spend_record``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dp import PrivacyAccountant, tree_mean_sigma
+from repro.core.keys import stream_key
+from repro.core.transport import (leaf_paths, tree_axpy, tree_leaf_dims,
+                                  wire_aggregate, wire_noise)
+from repro.serve.buffers import RingBuffer
+from repro.serve.flush import FlushPolicy
+
+__all__ = ["ServeConfig", "AggregationService"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static configuration of one service instance (anything here is
+    baked into the single compiled step)."""
+    #: registered repro.agg rule; must have a masked partial-fill form.
+    method: str = "dcq_mad"
+    #: ring-buffer slots (the continuous batch's maximum machine count).
+    capacity: int = 1024
+    #: per-coordinate scale pytree for needs_scale rules (protocol "dcq").
+    scale: Any = None
+    K: int = 10
+    trim_beta: float = 0.2
+    #: model update: theta <- theta - lr * aggregate.
+    lr: float = 1.0
+    #: central-DP budget per served round; > 0 adds per-leaf calibrated
+    #: Gaussian noise to the buffered updates inside the compiled step.
+    eps: float = 0.0
+    delta: float = 1e-6
+    #: samples per machine (the mean-mechanism sensitivity, Lemma 4.4).
+    dp_n: int = 100
+    dp_gamma: float = 2.0
+    dp_tail: str = "subexp"
+    #: bulk-ingest chunk: one compiled device write per this many rows.
+    ingest_block: int = 64
+    #: root seed for the per-round noise keys ("serve" stream).
+    seed: int = 0
+
+
+class AggregationService:
+    """Continuously-batched robust-DP aggregation over a streaming fleet.
+
+    ``theta`` is the served model (array or pytree); arriving updates
+    must match its structure. ``sharding`` optionally places the ring
+    buffer (e.g. capacity axis over a device mesh).
+    """
+
+    def __init__(self, theta: Any, cfg: ServeConfig = ServeConfig(),
+                 policy: Optional[FlushPolicy] = None,
+                 sharding: Optional[Any] = None):
+        self.cfg = cfg
+        self.policy = policy if policy is not None else FlushPolicy()
+        self.theta = theta
+        template = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                           jnp.asarray(x).dtype), theta)
+        self.buffer = RingBuffer(template, cfg.capacity,
+                                 block=cfg.ingest_block, sharding=sharding)
+        self.round_idx = 0
+        self.accountant = PrivacyAccountant()
+        self.ledger: list = []      # per-leaf spend records, every round
+        self.history: list = []     # per-round {round, fill, latency_s, ..}
+        self.rejected = 0
+        self._oldest_ts: Optional[float] = None
+        self._key = stream_key(cfg.seed, "serve")
+        self._trace_counts = {"step": 0}
+
+        # static per-leaf noise calibration: the serving wire is ONE
+        # transmission per round, so each flush spends the whole
+        # (eps, delta) on one mean-mechanism release per leaf.
+        self._paths = leaf_paths(template)
+        self._dims = [int(d) for d in jax.tree_util.tree_leaves(
+            tree_leaf_dims(template))]
+        if cfg.eps > 0:
+            self._sigma = tree_mean_sigma(tree_leaf_dims(template),
+                                          cfg.dp_n, cfg.dp_gamma, cfg.eps,
+                                          cfg.delta, cfg.dp_tail)
+        else:
+            self._sigma = None
+
+        def step(arrays, fill, theta, key):
+            self._trace_counts["step"] += 1     # runs at trace time only
+            vals = arrays
+            if self._sigma is not None:
+                # stale tail rows are noised too (same executable at every
+                # fill); the masked aggregation never reads them.
+                vals = wire_noise(key, vals, self._sigma)
+            agg = wire_aggregate(vals, cfg.method, scale=cfg.scale,
+                                 K=cfg.K, trim_beta=cfg.trim_beta,
+                                 fill=fill)
+            return tree_axpy(-cfg.lr, agg, theta), agg
+
+        self._step = jax.jit(step, donate_argnums=2)
+        # compiled row extraction for bulk-ingest tails: a traced index,
+        # so one executable serves every row of every round.
+        self._take_row = jax.jit(lambda rows, i: jax.tree_util.tree_map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, i, 0,
+                                                   keepdims=False), rows))
+
+    # ------------------------------------------------------------- state
+
+    @property
+    def fill(self) -> int:
+        return self.buffer.fill
+
+    @property
+    def trace_counts(self) -> dict:
+        """Compile-once accounting: the service step plus the buffer's
+        writers must each have traced exactly once, no matter how many
+        rounds were served."""
+        return {**self._trace_counts, **self.buffer.trace_counts}
+
+    def _age_s(self, now: Optional[float] = None) -> float:
+        if self._oldest_ts is None:
+            return 0.0
+        return (now if now is not None else time.perf_counter()) \
+            - self._oldest_ts
+
+    # ------------------------------------------------------------ ingest
+
+    def submit(self, update: Any) -> bool:
+        """One machine update. Returns False iff the buffer is full, the
+        policy does not flush, and backpressure is "reject"."""
+        if self.buffer.full:
+            if self.policy.should_flush(self.fill, self.cfg.capacity,
+                                        self._age_s()):
+                self.flush()
+            elif self.policy.backpressure == "reject":
+                self.rejected += 1
+                return False
+            # "overwrite": fall through; the ring wraps onto the oldest.
+        if self.buffer.fill == 0:
+            self._oldest_ts = time.perf_counter()
+        self.buffer.push(update)
+        self._maybe_flush()
+        return True
+
+    def submit_many(self, updates: Any) -> int:
+        """Bulk ingest of stacked updates (leading axis = machines): full
+        ``ingest_block`` chunks go through one compiled block write each,
+        the tail through the row path. Returns how many were accepted."""
+        n = jax.tree_util.tree_leaves(updates)[0].shape[0]
+        block = self.buffer.block
+        i = accepted = 0
+        while i < n:
+            room = self.cfg.capacity - self.fill
+            if room >= block and (n - i) >= block:
+                if self.buffer.fill == 0:
+                    self._oldest_ts = time.perf_counter()
+                self.buffer.push_block(updates, i)
+                i += block
+                accepted += block
+                self._maybe_flush()
+            else:
+                if self.submit(self._take_row(updates, jnp.int32(i))):
+                    accepted += 1
+                elif self.policy.backpressure == "reject":
+                    self.rejected += n - i - 1
+                    return accepted
+                i += 1
+        return accepted
+
+    # ------------------------------------------------------------- flush
+
+    def _maybe_flush(self) -> None:
+        if self.policy.should_flush(self.fill, self.cfg.capacity,
+                                    self._age_s()):
+            self.flush()
+
+    def poll(self) -> Optional[Any]:
+        """Deadline tick: flush iff the policy says the buffered updates
+        have waited long enough. Call from the serving loop's idle path."""
+        if self.fill >= self.policy.min_fill and self._age_s() > 0 \
+                and self.policy.max_delay_s is not None \
+                and self._age_s() >= self.policy.max_delay_s:
+            return self.flush()
+        return None
+
+    def flush(self) -> Optional[Any]:
+        """Aggregate the buffered prefix and update theta. Returns the
+        round's aggregate (theta's structure), or None when the buffer
+        holds fewer than ``min_fill`` updates."""
+        fill = self.fill
+        if fill < self.policy.min_fill:
+            return None
+        key = jax.random.fold_in(self._key, self.round_idx)
+        t0 = time.perf_counter()
+        self.theta, agg = self._step(self.buffer.arrays, jnp.int32(fill),
+                                     self.theta, key)
+        jax.block_until_ready(self.theta)
+        now = time.perf_counter()
+
+        cfg = self.cfg
+        if self._sigma is not None:
+            self.accountant.spend_tree(f"serve round {self.round_idx}",
+                                       cfg.eps, cfg.delta, self._sigma)
+            sigmas = [float(s) for s in
+                      jax.tree_util.tree_leaves(self._sigma)]
+        else:
+            sigmas = [0.0] * len(self._dims)
+        self.ledger.extend(
+            {"transmission": f"serve round {self.round_idx}", "leaf": p,
+             "dim": d, "sigma": s,
+             "eps": cfg.eps if self._sigma is not None else 0.0,
+             "delta": cfg.delta if self._sigma is not None else 0.0,
+             "noise": self._sigma is not None}
+            for p, d, s in zip(self._paths, self._dims, sigmas))
+        self.history.append({
+            "round": self.round_idx, "fill": fill,
+            "latency_s": now - (self._oldest_ts
+                                if self._oldest_ts is not None else t0),
+            "flush_s": now - t0,
+        })
+        self.round_idx += 1
+        self.buffer.reset()
+        self._oldest_ts = None
+        return agg

@@ -1,0 +1,75 @@
+"""The ``repro.api`` stability contract.
+
+``repro.api`` is the repository's public surface: the snapshot below is
+the promise. Extending it is fine (add the name HERE too); renaming or
+removing anything, or breaking an entry-point signature, fails this
+test and therefore CI — that is the point.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.api as api
+
+# -- the public-surface snapshot: edit deliberately, never incidentally --
+API_SNAPSHOT = {
+    # entry points
+    "run_protocol", "run_monte_carlo", "run_sweep", "serve",
+    # registry views
+    "registered_aggregators", "registered_attacks",
+    # the types those entry points consume / return
+    "ProtocolConfig", "ProtocolResult", "DPQNProtocol",
+    "MEstimationProblem", "get_problem",
+    "AggregationService", "ServeConfig", "FlushPolicy", "RingBuffer",
+}
+
+# every keyword a signature promises; positional order is part of it for
+# the leading data arguments.
+SIGNATURES = {
+    "run_protocol": ["X", "y", "problem", "cfg", "key", "seed"],
+    "run_monte_carlo": ["X", "y", "reps", "problem", "cfg", "keys", "seed"],
+    "run_sweep": ["scenarios", "fast", "artifact_path"],
+    "serve": ["theta", "cfg", "policy", "sharding"],
+}
+
+
+def test_public_surface_snapshot():
+    assert set(api.__all__) == API_SNAPSHOT
+    missing = [n for n in api.__all__ if not hasattr(api, n)]
+    assert not missing, f"__all__ names missing from module: {missing}"
+
+
+def test_entry_point_signatures_stable():
+    for name, params in SIGNATURES.items():
+        sig = inspect.signature(getattr(api, name))
+        got = [p for p in sig.parameters
+               if sig.parameters[p].kind is not inspect.Parameter.VAR_KEYWORD]
+        assert got == params, f"{name} signature drifted: {got}"
+
+
+def test_registry_views():
+    aggs = api.registered_aggregators()
+    assert {"mean", "median", "trimmed", "geomedian", "dcq",
+            "dcq_mad"} <= set(aggs)
+    assert {"none", "scale", "signflip"} <= set(api.registered_attacks())
+
+
+def test_serve_facade_runs():
+    svc = api.serve(jnp.zeros(4), method="median", capacity=6)
+    svc.submit_many(jax.random.normal(jax.random.PRNGKey(0), (6, 4)))
+    assert svc.round_idx == 1
+    # cfg and field kwargs are mutually exclusive
+    with pytest.raises(ValueError):
+        api.serve(jnp.zeros(4), cfg=api.ServeConfig(), method="median")
+
+
+def test_run_protocol_facade():
+    from repro.data.synthetic import make_shards
+    X, y = make_shards(jax.random.PRNGKey(0), "logistic", 6, 40, 4)
+    res = api.run_protocol(X, y, cfg=api.ProtocolConfig(noiseless=True))
+    assert res.theta_qn.shape == (4,)
+    arr = api.run_monte_carlo(X, y, reps=2,
+                              cfg=api.ProtocolConfig(noiseless=True))
+    assert arr.theta_qn.shape == (2, 4)

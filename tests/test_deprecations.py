@@ -1,0 +1,60 @@
+"""The PR4/PR5-era shims warn — exactly once — and name their registry
+replacement; ``import repro.core`` itself stays warning-free (the legacy
+names resolve lazily, PEP 562)."""
+import importlib
+import sys
+import warnings
+
+import pytest
+
+# shim module -> the replacement its warning must name
+SHIMS = {
+    "repro.core.robust_agg": "repro.agg",
+    "repro.core.dcq": "repro.agg",
+    "repro.core.byzantine": "repro.attacks",
+    "repro.kernels.dcq": "repro.agg",
+    "repro.kernels.dcq_ref": "repro.agg",
+}
+
+
+def _deprecations(records):
+    return [r for r in records
+            if issubclass(r.category, DeprecationWarning)]
+
+
+@pytest.mark.parametrize("mod,replacement", sorted(SHIMS.items()))
+def test_shim_warns_once_naming_replacement(mod, replacement):
+    sys.modules.pop(mod, None)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        importlib.import_module(mod)
+    dep = _deprecations(w)
+    assert len(dep) == 1, f"{mod}: expected exactly one warning, got " \
+        f"{[str(x.message) for x in dep]}"
+    msg = str(dep[0].message)
+    assert "deprecated" in msg and replacement in msg
+    # the cached re-import is silent: the warning fires once per process
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        importlib.import_module(mod)
+    assert not _deprecations(w2)
+
+
+def test_import_repro_core_is_warning_free():
+    """The package import must not load the shims as a side effect."""
+    sys.modules.pop("repro.core", None)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        importlib.import_module("repro.core")
+    assert not _deprecations(w)
+
+
+def test_legacy_names_still_resolve_through_repro_core():
+    """Pinned call sites (`repro.core.aggregate`, `repro.core.byzantine`)
+    keep working — through the lazy shim path."""
+    import repro.core
+    from repro.core.robust_agg import aggregate as direct
+    assert repro.core.aggregate is direct
+    assert hasattr(repro.core.byzantine, "byzantine_mask")
+    with pytest.raises(AttributeError):
+        repro.core.not_a_name

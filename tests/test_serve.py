@@ -1,0 +1,320 @@
+"""The streaming aggregation service: masked-aggregation byte contract,
+ring-buffer/flush-policy semantics, and the compile-once service loop.
+
+The load-bearing contract (repro.agg.masked): aggregating a
+fixed-capacity buffer's valid prefix through ``aggregate_masked`` is
+byte-identical to running the SAME masked entry on the dense unpadded
+prefix — for every registered aggregator, at every fill, under one
+trace per capacity. ``median`` is additionally bit-equal to the
+registry reference at every fill; all rules agree with the reference
+values to float tolerance (XLA's reduce trees make byte-equality
+against the raw reference impossible for sum-based rules at partial
+fill — only the summation ORDER differs).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import agg
+from repro.core import transport
+from repro.serve import (AggregationService, FlushPolicy, RingBuffer,
+                         ServeConfig)
+
+C, P = 12, 5
+FILLS = (1, 2, 5, 6, 11, 12)
+
+
+def _vals(seed=0, rows=C, p=P):
+    return jax.random.normal(jax.random.PRNGKey(seed), (rows, p))
+
+
+def _scale_for(method):
+    return jnp.full((P,), 0.7) if agg.get_aggregator(method).needs_scale \
+        else None
+
+
+# ------------------------------------------------- the fill-invariance law
+
+@pytest.mark.parametrize("method", sorted(agg.registered()))
+def test_every_registered_aggregator_is_servable(method):
+    assert agg.has_masked(method)
+
+
+@pytest.mark.parametrize("method", sorted(agg.registered()))
+def test_masked_byte_identical_to_dense_unpadded(method):
+    """Half-full (and any-full) buffer == dense unpadded batch, byte for
+    byte, jit vs jit, for EVERY registered aggregator."""
+    vals = _vals()
+    sc = _scale_for(method)
+    f = jax.jit(lambda v, fill: agg.aggregate_masked(
+        v, fill, method=method, scale=sc))
+    for k in FILLS:
+        buffered = f(vals, jnp.int32(k))
+        dense = f(vals[:k], jnp.int32(k))
+        np.testing.assert_array_equal(
+            np.asarray(buffered), np.asarray(dense),
+            err_msg=f"{method} diverges at fill={k}")
+
+
+@pytest.mark.parametrize("method", sorted(agg.registered()))
+def test_masked_values_match_reference(method):
+    """The masked path computes the same statistic as the registry
+    reference on the valid prefix (float tolerance: XLA chooses
+    different — equally valid — summation orders per row count)."""
+    vals = _vals(3)
+    sc = _scale_for(method)
+    f = jax.jit(lambda v, fill: agg.aggregate_masked(
+        v, fill, method=method, scale=sc))
+    for k in FILLS:
+        got = np.asarray(f(vals, jnp.int32(k)))
+        want = np.asarray(jax.jit(lambda v: agg.aggregate(
+            v, method=method, scale=sc, backend="reference"))(vals[:k]))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5,
+                                   err_msg=f"{method} at fill={k}")
+
+
+def test_masked_median_bitwise_equals_reference():
+    """Order statistics dodge the summation-order caveat: the parity-
+    balanced padding makes masked median EXACTLY the reference median of
+    the prefix, at every fill."""
+    vals = _vals(7)
+    f = jax.jit(lambda v, fill: agg.aggregate_masked(v, fill,
+                                                     method="median"))
+    ref = jax.jit(lambda v: jnp.median(v, axis=0))
+    for k in range(1, C + 1):
+        np.testing.assert_array_equal(
+            np.asarray(f(vals, jnp.int32(k))), np.asarray(ref(vals[:k])),
+            err_msg=f"median != reference at fill={k}")
+
+
+def test_masked_one_trace_across_fills():
+    """Every fill level reuses ONE executable — fill is a traced scalar,
+    never a shape."""
+    traces = {"n": 0}
+
+    def run(v, fill):
+        traces["n"] += 1
+        return agg.aggregate_masked(v, fill, method="dcq_mad")
+
+    f = jax.jit(run)
+    vals = _vals(1)
+    for k in FILLS:
+        f(vals, jnp.int32(k)).block_until_ready()
+    assert traces["n"] == 1
+
+
+def test_wire_aggregate_fill_routes_pytrees():
+    """transport.wire_aggregate(fill=...) == the masked entry per leaf,
+    byte for byte (the serving step's actual call path)."""
+    key = jax.random.PRNGKey(5)
+    tree = {"w": jax.random.normal(key, (C, 3, 2)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (C,))}
+    wired = jax.jit(lambda t, fill: transport.wire_aggregate(
+        t, "median", fill=fill))
+    direct = jax.jit(lambda x, fill: agg.aggregate_masked(
+        x, fill, method="median"))
+    for k in (1, 6, C):
+        out = wired(tree, jnp.int32(k))
+        for name in ("w", "b"):
+            np.testing.assert_array_equal(
+                np.asarray(out[name]),
+                np.asarray(direct(tree[name], jnp.int32(k))))
+
+
+def test_masked_errors():
+    vals = _vals()
+    with pytest.raises(ValueError, match="scale"):
+        agg.aggregate_masked(vals, jnp.int32(3), method="dcq")
+    with pytest.raises(ValueError, match="trim"):
+        jax.jit(lambda v, f: agg.aggregate_masked(
+            v, f, method="trimmed", trim_beta=0.5))(vals, jnp.int32(3))
+
+
+# ----------------------------------------------------------- ring buffer
+
+def test_ring_buffer_prefix_and_wrap():
+    buf = RingBuffer(jax.ShapeDtypeStruct((P,), jnp.float32), capacity=4)
+    rows = _vals(2, rows=6)
+    for i in range(4):
+        assert buf.push(rows[i]) == i
+    assert buf.fill == 4 and buf.full
+    # ring semantics: the 5th write wraps onto slot 0
+    assert buf.push(rows[4]) == 0
+    assert buf.fill == 4
+    got = np.asarray(buf.arrays)
+    np.testing.assert_array_equal(got[0], np.asarray(rows[4]))
+    np.testing.assert_array_equal(got[1:], np.asarray(rows[1:4]))
+
+
+def test_ring_buffer_block_write_needs_room():
+    buf = RingBuffer(jax.ShapeDtypeStruct((P,), jnp.float32),
+                     capacity=8, block=4)
+    rows = _vals(4, rows=8)
+    buf.push_block(rows, 0)
+    buf.push_block(rows, 4)
+    assert buf.full
+    with pytest.raises(ValueError, match="room"):
+        buf.push_block(rows, 0)
+    np.testing.assert_array_equal(np.asarray(buf.arrays),
+                                  np.asarray(rows))
+
+
+def test_ring_buffer_compiles_each_writer_once():
+    buf = RingBuffer(jax.ShapeDtypeStruct((P,), jnp.float32),
+                     capacity=8, block=2)
+    rows = _vals(5, rows=8)
+    buf.push(rows[0])
+    buf.push(rows[1])
+    buf.push_block(rows, 2)
+    buf.push_block(rows, 4)
+    assert buf.trace_counts == {"write": 1, "write_block": 1}
+    buf.reset()
+    assert buf.fill == 0
+    buf.push(rows[7])
+    assert buf.trace_counts == {"write": 1, "write_block": 1}
+
+
+# ----------------------------------------------------------- flush policy
+
+def test_flush_policy_triggers():
+    pol = FlushPolicy(capacity_frac=0.5, max_delay_s=1.0, min_fill=3)
+    assert pol.capacity_trigger(12) == 6
+    assert not pol.should_flush(2, 12)            # below min_fill
+    assert not pol.should_flush(2, 12, age_s=5.0)  # min_fill floors age too
+    assert not pol.should_flush(5, 12)
+    assert pol.should_flush(6, 12)                # capacity trigger
+    assert pol.should_flush(3, 12, age_s=1.0)     # deadline trigger
+    assert not pol.should_flush(3, 12, age_s=0.5)
+    none = FlushPolicy(capacity_frac=None)
+    assert none.capacity_trigger(12) is None
+    assert not none.should_flush(12, 12)          # explicit flushes only
+
+
+def test_flush_policy_validation():
+    for bad in (dict(capacity_frac=0.0), dict(capacity_frac=1.5),
+                dict(max_delay_s=-1.0), dict(min_fill=0),
+                dict(backpressure="drop")):
+        with pytest.raises(ValueError):
+            FlushPolicy(**bad)
+
+
+# ------------------------------------------------------------ the service
+
+def test_service_multi_flush_single_trace():
+    """An entire multi-round run — block ingest, row ingest, partial and
+    full flushes — retraces nothing: exactly one step trace, one trace
+    per buffer writer."""
+    cfg = ServeConfig(method="dcq_mad", capacity=C, ingest_block=4,
+                      lr=0.5, seed=2)
+    svc = AggregationService(jnp.zeros(P), cfg)
+    key = jax.random.PRNGKey(0)
+    for r in range(3):
+        assert svc.submit_many(
+            jax.random.normal(jax.random.fold_in(key, r), (C, P))) == C
+    # a partial round through the row path + explicit flush
+    for row in _vals(9, rows=5):
+        svc.submit(row)
+    assert svc.flush() is not None
+    assert svc.round_idx == 4
+    assert [h["fill"] for h in svc.history] == [C, C, C, 5]
+    assert svc.trace_counts == {"step": 1, "write": 1, "write_block": 1}
+
+
+def test_service_round_matches_dense_aggregation():
+    """One served round == the dense masked aggregate, byte for byte,
+    and theta moves by exactly -lr * aggregate."""
+    cfg = ServeConfig(method="median", capacity=C, lr=0.25, seed=0)
+    svc = AggregationService(jnp.zeros(P), cfg)
+    ups = _vals(11)
+    svc.submit_many(ups)
+    want = jax.jit(lambda v, f: agg.aggregate_masked(
+        v, f, method="median"))(ups, jnp.int32(C))
+    np.testing.assert_array_equal(np.asarray(svc.theta),
+                                  np.asarray(-0.25 * want))
+
+
+def test_service_ledger_records_every_round():
+    tree = {"w": jnp.zeros((3, 2)), "b": jnp.zeros(3)}
+    cfg = ServeConfig(method="median", capacity=6, eps=0.5, delta=1e-6,
+                      dp_n=200, seed=1)
+    svc = AggregationService(tree, cfg)
+    ups = {"w": _vals(0, rows=6, p=1).reshape(6, 1, 1)
+           * jnp.ones((6, 3, 2)), "b": _vals(1, rows=6, p=3)}
+    for r in range(3):
+        svc.submit_many(ups)
+    assert svc.round_idx == 3
+    # one spend-ledger record per leaf per round, eps/delta attached
+    assert len(svc.ledger) == 3 * 2
+    assert {e["transmission"] for e in svc.ledger} == \
+        {f"serve round {r}" for r in range(3)}
+    assert all(e["eps"] == 0.5 and e["sigma"] > 0 and e["noise"]
+               for e in svc.ledger)
+    # and one composition entry per round on the accountant
+    eps_tot, delta_tot = svc.accountant.total_basic()
+    assert eps_tot == pytest.approx(1.5)
+    assert delta_tot == pytest.approx(3e-6)
+
+
+def test_service_noiseless_ledger_still_records():
+    svc = AggregationService(jnp.zeros(P), ServeConfig(capacity=4))
+    svc.submit_many(_vals(2, rows=4))
+    assert len(svc.ledger) == 1
+    assert svc.ledger[0]["eps"] == 0.0 and not svc.ledger[0]["noise"]
+
+
+def test_service_deadline_flush_via_poll():
+    pol = FlushPolicy(capacity_frac=None, max_delay_s=0.2, min_fill=2)
+    svc = AggregationService(jnp.zeros(P),
+                             ServeConfig(capacity=C), policy=pol)
+    rows = _vals(0, rows=3)
+    svc.submit(rows[0])
+    time.sleep(0.25)
+    assert svc.poll() is None            # min_fill floors the deadline
+    # the next arrival sees the overdue deadline: ingest itself flushes
+    svc.submit(rows[1])
+    assert svc.round_idx == 1 and svc.history[-1]["fill"] == 2
+    svc = AggregationService(jnp.zeros(P),
+                             ServeConfig(capacity=C), policy=pol)
+    svc.submit(rows[0])
+    svc.submit(rows[1])
+    assert svc.round_idx == 0            # age < deadline at ingest
+    time.sleep(0.25)
+    assert svc.poll() is not None        # deadline fires on the partial fleet
+    assert svc.history[-1]["fill"] == 2
+    assert svc.poll() is None            # empty buffer: nothing to serve
+
+
+def test_service_backpressure_reject():
+    pol = FlushPolicy(capacity_frac=None, backpressure="reject")
+    svc = AggregationService(jnp.zeros(P),
+                             ServeConfig(capacity=4), policy=pol)
+    assert svc.submit_many(_vals(3, rows=6)) == 4
+    assert svc.rejected == 2 and svc.fill == 4
+    assert svc.flush() is not None
+
+
+def test_service_backpressure_overwrite():
+    pol = FlushPolicy(capacity_frac=None, backpressure="overwrite")
+    svc = AggregationService(jnp.zeros(P),
+                             ServeConfig(capacity=4), policy=pol)
+    rows = _vals(6, rows=6)
+    for row in rows:
+        assert svc.submit(row)
+    assert svc.rejected == 0 and svc.fill == 4
+    # ring wrapped: slots now hold rows [4, 5, 2, 3]
+    got = np.asarray(svc.buffer.arrays)
+    np.testing.assert_array_equal(got, np.asarray(
+        jnp.stack([rows[4], rows[5], rows[2], rows[3]])))
+
+
+def test_service_min_fill_blocks_explicit_flush():
+    pol = FlushPolicy(capacity_frac=None, min_fill=3)
+    svc = AggregationService(jnp.zeros(P),
+                             ServeConfig(capacity=C), policy=pol)
+    svc.submit(_vals(0, rows=1)[0])
+    assert svc.flush() is None and svc.round_idx == 0
+    svc.submit_many(_vals(1, rows=2))
+    assert svc.flush() is not None and svc.round_idx == 1
