@@ -90,21 +90,75 @@ def compare(fresh: dict, baseline: dict, factor: float = 2.0) -> list:
                   "BENCH_protocol.json)")
 
 
+AGG_REGEN_CMD = ("python -m benchmarks.kernel_bench --fast && "
+                 "cp BENCH_agg.json benchmarks/baselines/"
+                 "BENCH_agg_fast.json (then git checkout BENCH_agg.json)")
+
+#: max tolerated auto-dispatch overhead over the best measured backend at
+#: any shape bucket (the in-run dispatch-quality gate, machine-independent)
+AGG_AUTO_SLACK = 1.2
+
+
 def compare_agg(fresh: dict, baseline: dict, factor: float = 2.0) -> list:
-    """Gate for the batched-aggregation record (BENCH_agg.json,
-    kernel_bench.bench_batched_agg): batched-pallas wall time and its
-    same-machine speedup over the per-scenario sorted loop."""
-    return _two_signal_gate(
-        fresh, baseline, factor,
-        setting_keys=("B", "m", "p", "K", "reps"),
-        wall_key="batched_pallas_s", speedup_key="speedup_pallas_vs_loop",
-        label="batched aggregation",
-        speedup_label="speedup vs per-scenario sorted loop",
-        ok_msg="one fused batched launch no longer beats the per-scenario "
-               "sorted loop",
-        regen_cmd="python -m benchmarks.kernel_bench --fast && "
-                  "cp BENCH_agg.json benchmarks/baselines/"
-                  "BENCH_agg_fast.json (then git checkout BENCH_agg.json)")
+    """Gate for the batched-aggregation record (BENCH_agg.json schema v2,
+    kernel_bench.bench_batched_agg). Shape-aware: per bucket (sweep /
+    mid / large), the auto path (``backend=None`` through the measured
+    dispatch table) must sit within ``AGG_AUTO_SLACK`` of the best
+    measured backend IN THE SAME RUN — a stale or wrong dispatch table
+    fails regardless of machine speed. The cross-run two-signal gate
+    (wall-clock AND same-machine speedup vs the per-scenario sorted
+    loop) runs on the sweep bucket, where the loop reference exists."""
+    failures = []
+    if fresh.get("schema") != 2 or baseline.get("schema") != 2:
+        return [f"BENCH_agg schema mismatch (fresh "
+                f"{fresh.get('schema')!r}, baseline "
+                f"{baseline.get('schema')!r}; need v2); regenerate via "
+                f"`{AGG_REGEN_CMD}`"]
+    fb, bb = fresh.get("buckets", {}), baseline.get("buckets", {})
+    if set(fb) != set(bb):
+        failures.append(
+            f"BENCH_agg bucket sets differ (fresh {sorted(fb)}, baseline "
+            f"{sorted(bb)}); regenerate via `{AGG_REGEN_CMD}`")
+    for name in sorted(set(fb) & set(bb)):
+        fr, br = fb[name], bb[name]
+        shape_f = tuple(fr.get(k) for k in ("B", "m", "p"))
+        shape_b = tuple(br.get(k) for k in ("B", "m", "p"))
+        if shape_f != shape_b:
+            failures.append(
+                f"agg bucket [{name}] shape differs from baseline "
+                f"({shape_f} vs {shape_b}); regenerate via "
+                f"`{AGG_REGEN_CMD}`")
+            continue
+        ratio = fr.get("auto_vs_best")
+        print(f"agg [{name}] B={fr['B']} m={fr['m']} p={fr['p']}: "
+              f"auto->{fr.get('auto_backend')} auto/best={ratio:.2f}x "
+              f"(slack {AGG_AUTO_SLACK}x)")
+        if ratio is None or ratio > AGG_AUTO_SLACK:
+            failures.append(
+                f"agg bucket [{name}]: auto dispatch ran {ratio:.2f}x "
+                f"slower than the best measured backend (> "
+                f"{AGG_AUTO_SLACK}x); the dispatch table is stale — "
+                "re-tune with repro-agg-tune")
+    sweep_f, sweep_b = fb.get("sweep"), bb.get("sweep")
+    if sweep_f and sweep_b and "speedup_auto_vs_loop" in sweep_f \
+            and "speedup_auto_vs_loop" in sweep_b:
+        wall = {"setting": dict(sweep_f, **fresh["setting"]),
+                "wall_s": sweep_f["backends_s"]["auto"],
+                "speedup": sweep_f["speedup_auto_vs_loop"],
+                "ok": fresh.get("ok", False)}
+        base = {"setting": dict(sweep_b, **baseline["setting"]),
+                "wall_s": sweep_b["backends_s"]["auto"],
+                "speedup": sweep_b["speedup_auto_vs_loop"]}
+        failures += _two_signal_gate(
+            wall, base, factor,
+            setting_keys=("B", "m", "p", "K", "reps", "method"),
+            wall_key="wall_s", speedup_key="speedup",
+            label="batched aggregation (sweep bucket)",
+            speedup_label="auto speedup vs per-scenario sorted loop",
+            ok_msg="auto dispatch slower than the best measured backend "
+                   "at some shape bucket",
+            regen_cmd=AGG_REGEN_CMD)
+    return failures
 
 
 def compare_attacks(fresh: dict, baseline: dict,

@@ -1,0 +1,263 @@
+"""Tile/grid autotuner for the order-statistics kernels.
+
+For every registered aggregator's Pallas form (plus the fused
+``median_mad_dcq`` pass and the masked serving rules) this sweeps the
+kernel's static knobs — coordinate tile width ``tile``, in-kernel
+coordinate-loop depth ``inner`` and bisection trip count ``n_bisect`` —
+over a grid of ``(B, m, p)`` problem shapes, times each candidate
+against the jnp reference on the CURRENT platform, and records the
+measured winners into a :class:`repro.agg.dispatch.DispatchTable`:
+
+    repro-agg-tune --out src/repro/agg/tables/cpu.json
+
+Candidates must pass a correctness gate (99.9th-percentile abs error vs
+the reference oracle below ``tol``, see :func:`_gate_err` for why not
+the max) before their timing counts — a fast-but-wrong ``n_bisect`` can
+never enter the table. Every recorded tuning parameter
+is an int: the knobs feed ``jax.jit`` static arguments, where float or
+unhashable keys silently retrace per call (the repro.analyze
+retrace-hazard rule polices exactly this).
+
+Timings use an injectable ``timer`` (default ``time.perf_counter``) so
+tests can pin a deterministic clock; with a fixed clock and fixed seeds
+the emitted table is byte-stable.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.agg import (aggregate_masked, get_aggregator, has_pallas,
+                       median_mad_dcq, ostat_pallas, registered)
+from repro.agg.dispatch import SCHEMA, TABLE_DIR, DispatchTable
+from repro.agg.kernel import N_BISECT, clamp_block
+
+__all__ = ["DEFAULT_SHAPES", "FAST_SHAPES", "autotune", "main"]
+
+#: (B, m, p) problem shapes tuned by default: the sweep engine's regime
+#: (many tiny problems), protocol-scale single problems, and the mid-/
+#: large-p gradient regimes the high-dimensional DP line needs.
+DEFAULT_SHAPES = (
+    (320, 8, 10),        # sweep hot loop: B scenarios x (m, p) tiles
+    (1, 8, 10),          # one protocol round at paper scale
+    (8, 8, 4096),        # mid-p: a small grid of gradient-sized problems
+    (1, 8, 4096),
+    (1, 8, 262144),      # large-p: one model-gradient-sized problem
+)
+
+#: reduced shapes for CI / nightly smoke runs
+FAST_SHAPES = (
+    (96, 8, 10),
+    (4, 8, 1024),
+    (1, 8, 16384),
+)
+
+#: masked (serving) capacities tuned per payload width p
+MASKED_CAPACITY = 256
+
+_TILES = (256, 512, 1024, 2048)
+_INNERS = (1, 4)
+_N_BISECTS = (32, 60)
+
+
+def _pallas_candidates(op: str, m: int, p: int):
+    """Deduplicated (tile, inner, n_bisect) candidates for one problem.
+    Tiles/inners are pre-clamped to the VMEM budget and the coordinate
+    count; ops that never bisect (mean) collapse the n_bisect axis."""
+    seen, out = set(), []
+    n_bisects = (N_BISECT,) if op == "mean" else _N_BISECTS
+    for tile in _TILES:
+        for inner in _INNERS:
+            ct, ci = clamp_block(m, p, tile, inner)
+            for nb in n_bisects:
+                key = (ct, ci, nb)
+                if key not in seen:
+                    seen.add(key)
+                    out.append(key)
+    return out
+
+
+def _steady(fn, reps: int, timer) -> float:
+    """Steady-state seconds per call: one warmup (compile), then the mean
+    of ``reps`` timed calls."""
+    jax.block_until_ready(fn())
+    t0 = timer()
+    r = None
+    for _ in range(reps):
+        r = fn()
+    jax.block_until_ready(r)
+    return (timer() - t0) / reps
+
+
+def _gate_err(a, b) -> float:
+    """Correctness-gate error: the 99.9th-percentile abs deviation.
+
+    The CQ estimators are sums of indicators I(v <= med + scale*Delta_k):
+    when a value sits within f32 rounding of a knot threshold, last-ulp
+    differences between backends flip one indicator and the estimate
+    jumps by ~scale/(m*psi_sum) at that single coordinate — an inherent
+    discontinuity, not a kernel bug, and at p~1e5+ some coordinate will
+    always tie. A genuinely wrong candidate (under-resolved bisection,
+    bad tiling) is off at EVERY coordinate, so gating the 99.9th
+    percentile rejects it while tolerating isolated tie flips."""
+    d = jnp.abs(jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32))
+    return float(jnp.quantile(d.reshape(-1), 0.999))
+
+
+def _tune_op(table: DispatchTable, op: str, B: int, m: int, p: int, *,
+             reps: int, timer, tol: float, log) -> None:
+    """Measure reference vs every Pallas candidate for one (op, shape)."""
+    is_fused = op == "median_mad_dcq"
+    agg = None if is_fused else get_aggregator(op)
+    key = jax.random.PRNGKey(0)
+    v = jax.random.normal(key, (B, m, p), jnp.float32) * 2.0
+    scale = None
+    if agg is not None and agg.needs_scale:
+        scale = jnp.abs(jax.random.normal(jax.random.PRNGKey(1),
+                                          (B, p))) + 0.1
+
+    if is_fused:
+        def ref_call(vv=v):
+            return median_mad_dcq(vv, backend="reference")
+    else:
+        ref = jax.jit(lambda vv, sc: agg.reference(
+            vv, scale=sc, K=10, trim_beta=0.2, axis=-2))
+
+        def ref_call(vv=v, sc=scale):
+            return ref(vv, sc)
+
+    oracle = ref_call()
+    t_ref = _steady(ref_call, reps, timer)
+    table.record(op, B, m, p, "reference", t_ref)
+
+    best = None
+    for tile, inner, nb in _pallas_candidates(op, m, p):
+        def pal_call(tile=tile, inner=inner, nb=nb):
+            return ostat_pallas(v, op, scale, K=10, trim_beta=0.2,
+                                tile=tile, inner=inner, n_bisect=nb)
+        out = pal_call()
+        err = max(_gate_err(o, r) for o, r in zip(
+            out if isinstance(out, tuple) else (out,),
+            oracle if isinstance(oracle, tuple) else (oracle,)))
+        if err > tol:
+            log(f"    pallas tile={tile} inner={inner} n_bisect={nb}: "
+                f"REJECTED err={err:.2e} > {tol:g}")
+            continue
+        t = _steady(pal_call, reps, timer)
+        log(f"    pallas tile={tile} inner={inner} n_bisect={nb}: "
+            f"{t * 1e3:.3f}ms (err {err:.2e})")
+        if best is None or t < best[0]:
+            best = (t, tile, inner, nb)
+    if best is not None:
+        t, tile, inner, nb = best
+        table.record(op, B, m, p, "pallas", t,
+                     tile=int(tile), inner=int(inner), n_bisect=int(nb))
+    win = table.best(op, B, m, p)
+    log(f"  {op} B={B} m={m} p={p}: reference={t_ref * 1e3:.3f}ms  "
+        f"best={win[0] if win else '?'}")
+
+
+def _tune_masked(table: DispatchTable, rule: str, C: int, p: int, *,
+                 reps: int, timer, tol: float, log) -> None:
+    """Measure the masked sort backend vs the sort-free bisect backend at
+    one serving (capacity, p); recorded under op ``masked:<rule>``."""
+    agg = get_aggregator(rule)
+    v = jax.random.normal(jax.random.PRNGKey(2), (C, p), jnp.float32)
+    scale = (jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (p,))) + 0.1
+             if agg.needs_scale else None)
+    fill = jnp.int32((3 * C) // 4)      # a partially-filled buffer
+
+    def call(be):
+        fn = jax.jit(lambda vv, ff: aggregate_masked(
+            vv, ff, method=rule, scale=scale, backend=be))
+        return lambda: fn(v, fill)
+
+    sort_call = call("sort")
+    oracle = sort_call()
+    t_sort = _steady(sort_call, reps, timer)
+    table.record(f"masked:{rule}", 1, C, p, "sort", t_sort)
+    t_bis = None
+    if agg.masked_bisect is not None:
+        bis_call = call("bisect")
+        err = _gate_err(bis_call(), oracle)
+        if err <= tol:
+            t_bis = _steady(bis_call, reps, timer)
+            table.record(f"masked:{rule}", 1, C, p, "bisect", t_bis)
+        else:
+            log(f"    masked:{rule} bisect REJECTED err={err:.2e}")
+    log(f"  masked:{rule} C={C} p={p}: sort={t_sort * 1e3:.3f}ms  "
+        + (f"bisect={t_bis * 1e3:.3f}ms" if t_bis is not None
+           else "bisect=n/a"))
+
+
+def autotune(ops=None, shapes=DEFAULT_SHAPES, *, platform=None,
+             reps: int = 3, timer=time.perf_counter, tol: float = 5e-4,
+             include_masked: bool = True, masked_capacity=MASKED_CAPACITY,
+             table: DispatchTable = None, verbose: bool = True
+             ) -> DispatchTable:
+    """Measure every backend over ``ops`` x ``shapes`` and return the
+    populated dispatch table (extending ``table`` when given).
+
+    Deterministic given a deterministic ``timer``: ops and shapes are
+    visited in a fixed order with fixed PRNG seeds, so tests can pin a
+    stub clock and assert byte-stable output.
+    """
+    log = print if verbose else (lambda *_a, **_k: None)
+    if platform is None:
+        platform = jax.default_backend()
+    if ops is None:
+        ops = [n for n in registered() if has_pallas(n)]
+        ops.append("median_mad_dcq")
+    if table is None:
+        table = DispatchTable(platform, meta={
+            "generated_by": "repro.agg.autotune", "jax": jax.__version__,
+            "reps": reps})
+    for op in ops:
+        for B, m, p in shapes:
+            _tune_op(table, op, B, m, p, reps=reps, timer=timer, tol=tol,
+                     log=log)
+    if include_masked:
+        masked_rules = [n for n in registered()
+                        if get_aggregator(n).masked is not None]
+        for rule in masked_rules:
+            for p in sorted({s[2] for s in shapes}):
+                _tune_masked(table, rule, masked_capacity, p, reps=reps,
+                             timer=timer, tol=tol, log=log)
+    return table
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Autotune repro.agg kernels and write the measured "
+                    "backend-dispatch table for this platform.")
+    ap.add_argument("--out", default=None,
+                    help="output table path (default: the committed "
+                         "package table for this platform, "
+                         f"{TABLE_DIR}/<platform>.json)")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced shape grid (CI / nightly smoke)")
+    ap.add_argument("--ops", nargs="*", default=None,
+                    help="subset of ops to tune (default: every "
+                         "registered Pallas aggregator + the fused pass)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--no-masked", action="store_true",
+                    help="skip the masked (serving) backends")
+    args = ap.parse_args(argv)
+
+    platform = jax.default_backend()
+    shapes = FAST_SHAPES if args.fast else DEFAULT_SHAPES
+    print(f"== repro-agg-tune: platform={platform} jax={jax.__version__} "
+          f"schema={SCHEMA} ==")
+    table = autotune(ops=args.ops, shapes=shapes, platform=platform,
+                     reps=args.reps, include_masked=not args.no_masked)
+    out = args.out if args.out else TABLE_DIR / f"{platform}.json"
+    path = table.save(out)
+    print(f"wrote {len(table.entries)} entries -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

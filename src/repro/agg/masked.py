@@ -38,6 +38,24 @@ summation ORDER (documented here, tested there).
 These kernels take the machine axis at 0 and a 2-D ``(C, p)`` payload —
 ``repro.agg.aggregate_masked`` and the transport wire flatten pytree
 leaves to that layout, exactly as the Pallas path does.
+
+Two masked BACKENDS exist for the order-statistics rules (median / dcq /
+dcq_mad):
+
+  * **sort** — the forms above (``jnp.median`` with parity-balanced
+    padding): bit-equal to the dense reference, O(C log C) per column;
+  * **bisect** — the ``*_bisect`` forms: the Pallas kernel's rank-count
+    bisection transplanted to the masked regime (invalid rows excluded
+    from every count/min/max). Sort-free — O(n_bisect * C * p) full-width
+    comparisons — which is the winning complexity at serving scale
+    (large p, big capacity). Fill-invariance holds for the same reason it
+    holds densely: indicator counts are small-integer float sums (exact
+    in any reduction order), and min/max with ±inf padding are exact, so
+    ``bisect(buffer, fill=k)`` is byte-identical to
+    ``bisect(buffer[:k], fill=k)``. The bisect median agrees with
+    ``jnp.median`` only to bisection resolution (~fp32 eps), NOT
+    bit-exactly — which is why it is a separate dispatchable backend
+    (repro.agg.dispatch, op key ``masked:<rule>``) and not a swap-in.
 """
 from __future__ import annotations
 
@@ -45,12 +63,14 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.stats import norm
 
+from repro.agg.kernel import N_BISECT
 from repro.agg.reference import (MAD_EPS, MAD_SIGMA, quantile_knots,
                                  quantile_levels)
 
 __all__ = ["BLOCK", "blocked_sum", "masked_mean", "masked_median",
            "masked_trimmed", "masked_geomedian", "masked_dcq",
-           "masked_dcq_mad"]
+           "masked_dcq_mad", "masked_median_bisect", "masked_dcq_bisect",
+           "masked_dcq_mad_bisect"]
 
 #: rows per sequential sum chunk. Part of the numeric contract: both the
 #: buffered and the dense side chunk identically, so the per-block reduce
@@ -165,11 +185,10 @@ def masked_geomedian(values, fill, *, scale=None, K=10, trim_beta=0.2,
     return z.reshape(values.shape[1:])
 
 
-def masked_dcq(values, fill, *, scale=None, K=10, trim_beta=0.2):
-    """DCQ with oracle scale over the valid prefix (reference.dcq with
-    masked median anchor and block-sequential indicator sums; the machine
-    count in the denominator is the traced fill)."""
-    med = masked_median(values, fill)
+def _cq_correct_masked(values, fill, med, scale, K):
+    """Composite-quantile correction around a given median anchor over the
+    valid prefix (block-sequential indicator sums; the machine count in
+    the denominator is the traced fill)."""
     delta = quantile_knots(K).astype(values.dtype)
     kappa = quantile_levels(K).astype(values.dtype)
     thr = med[None] + scale[None] * delta.reshape((K,) + (1,) * med.ndim)
@@ -181,6 +200,13 @@ def masked_dcq(values, fill, *, scale=None, K=10, trim_beta=0.2):
     return med - scale * s / denom
 
 
+def masked_dcq(values, fill, *, scale=None, K=10, trim_beta=0.2):
+    """DCQ with oracle scale over the valid prefix (reference.dcq with
+    masked median anchor and block-sequential indicator sums)."""
+    return _cq_correct_masked(values, fill, masked_median(values, fill),
+                              scale, K)
+
+
 def masked_dcq_mad(values, fill, *, scale=None, K=10, trim_beta=0.2):
     """MAD-self-calibrated DCQ (the gradient/serving wire carries no
     variance estimates); f32 like the reference and the Pallas kernel."""
@@ -189,3 +215,69 @@ def masked_dcq_mad(values, fill, *, scale=None, K=10, trim_beta=0.2):
     mad = masked_median(jnp.abs(values - med[None]), fill)
     mad_scale = MAD_SIGMA * mad + MAD_EPS
     return masked_dcq(values, fill, scale=mad_scale, K=K)
+
+
+# ------------------------------------------------- sort-free bisect backend
+
+def _masked_kth(values, fill, ks, n_bisect: int = N_BISECT):
+    """Rank-count bisection k-th order statistics over the valid prefix.
+
+    values: (C, p); fill: traced valid-row count; ks: (q,) traced
+    0-indexed ranks (each < fill). Returns (q, p), each row the
+    ks[i]-smallest per column among the first ``fill`` rows, to
+    ``n_bisect``-halving resolution. Every operation is exact and
+    independent of the stale tail (counts are small-integer float sums;
+    min/max see ±inf in invalid slots), so the result is byte-identical
+    to running the same bisection on the dense ``values[:fill]``.
+    """
+    C = values.shape[0]
+    valid = (jnp.arange(C) < fill)[:, None]
+    lo = jnp.min(jnp.where(valid, values, jnp.inf), axis=0)     # (p,)
+    hi = jnp.max(jnp.where(valid, values, -jnp.inf), axis=0)
+    q = ks.shape[0]
+    lo = jnp.broadcast_to(lo, (q,) + lo.shape)
+    hi = jnp.broadcast_to(hi, (q,) + hi.shape)
+    # counts in f32 regardless of payload dtype: a bf16 count of a
+    # 16384-slot buffer would round and return the wrong rank
+    kf = ks.astype(jnp.float32)[:, None]
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)                                   # (q, p)
+        le = (values[None] <= mid[:, None]) & valid[None]       # (q, C, p)
+        cnt = jnp.sum(le.astype(jnp.float32), axis=1)
+        go_right = cnt <= kf
+        return jnp.where(go_right, mid, lo), jnp.where(go_right, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, n_bisect, body, (lo, hi))
+    return hi
+
+
+def masked_median_bisect(values, fill, *, scale=None, K=10, trim_beta=0.2,
+                         n_bisect: int = N_BISECT):
+    """Sort-free masked median: one dual-rank bisection pass instead of
+    the dual parity-padded sorts. Matches ``masked_median`` to bisection
+    resolution (NOT bit-exactly); fill-invariant byte-for-byte."""
+    ks = jnp.stack([(fill - 1) // 2, fill // 2]).astype(jnp.int32)
+    two = _masked_kth(values, fill, ks, n_bisect)
+    return jnp.where(fill % 2 == 1, two[0], 0.5 * (two[0] + two[1]))
+
+
+def masked_dcq_bisect(values, fill, *, scale=None, K=10, trim_beta=0.2,
+                      n_bisect: int = N_BISECT):
+    """DCQ with oracle scale, bisect median anchor: fully sort-free (the
+    CQ correction was already rank-counting)."""
+    med = masked_median_bisect(values, fill, n_bisect=n_bisect)
+    return _cq_correct_masked(values, fill, med, scale, K)
+
+
+def masked_dcq_mad_bisect(values, fill, *, scale=None, K=10, trim_beta=0.2,
+                          n_bisect: int = N_BISECT):
+    """MAD-self-calibrated DCQ, fully sort-free: both medians by
+    rank-count bisection, then the indicator-sum correction."""
+    values = values.astype(jnp.float32)
+    med = masked_median_bisect(values, fill, n_bisect=n_bisect)
+    mad = masked_median_bisect(jnp.abs(values - med[None]), fill,
+                               n_bisect=n_bisect)
+    mad_scale = MAD_SIGMA * mad + MAD_EPS
+    return _cq_correct_masked(values, fill, med, mad_scale, K)

@@ -47,6 +47,13 @@ class Aggregator:
     #: rows are valid; byte-identical to itself on the dense unpadded batch
     #: (repro.agg.masked). ``None`` = rule not servable from a ring buffer.
     masked: Optional[Callable] = None
+    #: sort-free masked form (rank-count bisection, repro.agg.masked
+    #: ``*_bisect``): same signature and fill-invariance contract as
+    #: ``masked`` but O(n_bisect * C * p) comparisons instead of a
+    #: per-column sort — the large-p serving backend. The dispatch table
+    #: (repro.agg.dispatch, op key ``masked:<name>``) picks between the
+    #: two per measured shape bucket. ``None`` = no bisect form.
+    masked_bisect: Optional[Callable] = None
     #: True when the rule consumes a per-coordinate scale (protocol DCQ).
     needs_scale: bool = False
     #: coordinate-wise rules commute with payload sharding (collectives.py)

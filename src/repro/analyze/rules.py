@@ -518,6 +518,105 @@ def check_pallas_static(mod: ModuleInfo, graph: CallGraph) -> list:
 
 
 # --------------------------------------------------------------------------
+# retrace-hazard: a jitted function's static arguments are compile-cache
+# keys. Passing a float-VALUED expression (float(x), x * 0.5) retraces on
+# every distinct value, and an unhashable literal ([..], {..}) raises —
+# both silently defeat the compile-once engine. Bare float constants are
+# fine (one value, one trace): this rule polices call-site expressions,
+# not declarations. The tuning knobs threaded by repro.agg.dispatch are
+# ints end-to-end for exactly this reason.
+# --------------------------------------------------------------------------
+
+def _jit_static_spec(call, imports):
+    """(static_argnums, static_argnames) sets from a jax.jit(...) call or
+    a partial(jax.jit, ...) decorator; None when no statics declared."""
+    nums, names = set(), set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, int):
+                    nums.add(c.value)
+        elif kw.arg == "static_argnames":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    names.add(c.value)
+    return (nums, names) if (nums or names) else None
+
+
+def _local_jitted(mod: ModuleInfo) -> dict:
+    """Module-local names bound to jitted callables with declared statics:
+    ``f = jax.jit(g, static_argnums=...)`` assignments and
+    ``@partial(jax.jit, static_argnames=...)`` decorated defs."""
+    jitted = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            d = dotted(node.value.func, mod.imports)
+            if d and d.rsplit(".", 1)[-1] == "jit":
+                spec = _jit_static_spec(node.value, mod.imports)
+                if spec:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            jitted[t.id] = spec
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if not (isinstance(dec, ast.Call) and dec.args):
+                    continue
+                dd = dotted(dec.func, mod.imports)
+                inner = dotted(dec.args[0], mod.imports)
+                if (dd and dd.rsplit(".", 1)[-1] == "partial" and inner
+                        and inner.rsplit(".", 1)[-1] == "jit"):
+                    spec = _jit_static_spec(dec, mod.imports)
+                    if spec:
+                        jitted[node.name] = spec
+    return jitted
+
+
+def _static_hazard(expr, imports) -> str | None:
+    """Why ``expr`` is hazardous as a static argument, or None."""
+    if isinstance(expr, ast.List):
+        return "unhashable list literal"
+    if isinstance(expr, ast.Dict):
+        return "unhashable dict literal"
+    if isinstance(expr, ast.Set):
+        return "unhashable set literal"
+    if isinstance(expr, ast.Call):
+        if isinstance(expr.func, ast.Name) and expr.func.id == "float":
+            return "float(...) value (retraces per value)"
+    if isinstance(expr, ast.BinOp):
+        for sub in ast.walk(expr):
+            if (isinstance(sub, ast.Constant)
+                    and isinstance(sub.value, float)):
+                return "float-valued expression (retraces per value)"
+    return None
+
+
+def check_retrace_hazard(mod: ModuleInfo, graph: CallGraph) -> list:
+    jitted = _local_jitted(mod)
+    if not jitted:
+        return []
+    findings = []
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in jitted):
+            continue
+        nums, names = jitted[node.func.id]
+        slots = [(a, f"positional static arg {i}") for i, a in
+                 enumerate(node.args) if i in nums]
+        slots += [(kw.value, f"static arg {kw.arg!r}") for kw in
+                  node.keywords if kw.arg in names]
+        for expr, where in slots:
+            why = _static_hazard(expr, mod.imports)
+            if why:
+                findings.append(Finding(
+                    rule="retrace-hazard", path=mod.path, line=expr.lineno,
+                    col=expr.col_offset,
+                    message=f"{why} passed as {where} of jitted "
+                            f"{node.func.id!r}: static args are compile-"
+                            "cache keys — pass hashable ints/strs"))
+    return findings
+
+
+# --------------------------------------------------------------------------
 
 register(Rule(
     name="key-reuse", check=check_key_reuse,
@@ -540,3 +639,8 @@ register(Rule(
     name="pallas-static", check=check_pallas_static,
     doc="pallas_call grid/BlockSpec dims must be compile-time constants; "
         "no hardcoded interpret=True in library code"))
+register(Rule(
+    name="retrace-hazard", check=check_retrace_hazard,
+    doc="no float-valued or unhashable expressions in the static-argument "
+        "slots of jitted calls: statics are compile-cache keys and "
+        "silently retrace (or raise) per value"))

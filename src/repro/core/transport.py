@@ -183,16 +183,20 @@ def wire_aggregate(values: Any, method: str, scale: Any = None,
     fixed-capacity ring buffer whose first ``fill`` (traced scalar) rows
     are valid, and dispatch routes to ``repro.agg.aggregate_masked`` —
     byte-identical to aggregating the dense unpadded prefix, at one trace
-    per capacity. ``backend`` does not apply to the masked path.
+    per capacity. On the masked path ``backend`` selects between the
+    masked forms (``"sort"`` / ``"bisect"``); ``None`` consults the
+    measured dispatch table (``repro.agg.dispatch``).
     """
     if fill is not None:
         if not isinstance(values, (dict, list, tuple)):
             return agg.aggregate_masked(values, fill, method=method,
                                         scale=scale, K=K,
-                                        trim_beta=trim_beta, axis=0)
+                                        trim_beta=trim_beta, axis=0,
+                                        backend=backend)
         leaves, treedef = jax.tree_util.tree_flatten(values)
         out = [agg.aggregate_masked(leaf, fill, method=method, scale=sc,
-                                    K=K, trim_beta=trim_beta, axis=0)
+                                    K=K, trim_beta=trim_beta, axis=0,
+                                    backend=backend)
                for leaf, sc in zip(leaves, _match(values, scale))]
         return jax.tree_util.tree_unflatten(treedef, out)
     if not isinstance(values, (dict, list, tuple)):

@@ -64,6 +64,9 @@ class ServeConfig:
     ingest_block: int = 64
     #: root seed for the per-round noise keys ("serve" stream).
     seed: int = 0
+    #: masked aggregation form: "sort", "bisect", or None to consult the
+    #: measured dispatch table (repro.agg.dispatch) for this platform.
+    masked_backend: Optional[str] = None
 
 
 class AggregationService:
@@ -116,7 +119,7 @@ class AggregationService:
                 vals = wire_noise(key, vals, self._sigma)
             agg = wire_aggregate(vals, cfg.method, scale=cfg.scale,
                                  K=cfg.K, trim_beta=cfg.trim_beta,
-                                 fill=fill)
+                                 fill=fill, backend=cfg.masked_backend)
             return tree_axpy(-cfg.lr, agg, theta), agg
 
         self._step = jax.jit(step, donate_argnums=2)

@@ -1,0 +1,28 @@
+"""Seeded retrace-hazard violations: float-valued and unhashable
+expressions fed into the static-argument slots of jitted callables —
+each distinct value is a new compile-cache key (or a TypeError)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _kernel(x, tile, beta):
+    return jnp.tanh(x) * tile + beta
+
+
+run = jax.jit(_kernel, static_argnums=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "opts"))
+def launch(x, tile=128, opts=None):
+    return x * tile
+
+
+def sweep(x, sizes):
+    out = []
+    for s in sizes:
+        out.append(run(x, float(s), 0.2))        # VIOLATION: float(s) static
+        out.append(run(x, s * 1.5, 0.2))         # VIOLATION: float expr
+        out.append(launch(x, tile=[s, s]))       # VIOLATION: unhashable list
+    return out

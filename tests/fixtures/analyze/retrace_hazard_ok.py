@@ -1,0 +1,26 @@
+"""Clean static-argument usage: int tuning knobs and constant float
+hyperparameters (one value, one trace) in jitted static slots."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _kernel(x, tile, beta):
+    return jnp.tanh(x) * tile + beta
+
+
+run = jax.jit(_kernel, static_argnums=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def launch(x, tile=128):
+    return x * tile
+
+
+def sweep(x, sizes):
+    out = []
+    for s in sizes:
+        out.append(run(x, int(s), 0.2))    # int knob + constant float: fine
+        out.append(launch(x, tile=2 * s))  # int expression: fine
+    return out

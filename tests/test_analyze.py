@@ -29,6 +29,7 @@ RULE_FIXTURES = [
     ("ledger-pairing", "ledger_pairing_bad.py", "ledger_pairing_ok.py"),
     ("jit-purity", "jit_purity_bad.py", "jit_purity_ok.py"),
     ("pallas-static", "pallas_static_bad.py", "pallas_static_ok.py"),
+    ("retrace-hazard", "retrace_hazard_bad.py", "retrace_hazard_ok.py"),
 ]
 
 
@@ -81,6 +82,15 @@ def test_pallas_static_flags_grid_and_interpret():
     assert "interpret=True" in messages
 
 
+def test_retrace_hazard_flags_each_hazard_class():
+    messages = " | ".join(
+        f.message
+        for f in run_rule("retrace-hazard", "retrace_hazard_bad.py").findings
+    )
+    for marker in ("float(...)", "float-valued expression", "unhashable list"):
+        assert marker in messages, f"retrace-hazard missed {marker!r}"
+
+
 # ---------------------------------------------------------------------------
 # suppressions
 # ---------------------------------------------------------------------------
@@ -127,6 +137,7 @@ def test_registry_round_trip():
         "ledger-pairing",
         "jit-purity",
         "pallas-static",
+        "retrace-hazard",
     }
     rule = Rule(
         name="test-noop",

@@ -1,0 +1,372 @@
+"""Tests for the measured backend-dispatch table and the autotuner.
+
+Covers: table round-trip and int-param validation, shape-bucketed
+lookup, the three-tier ``backend=None`` policy (table hit / unmeasured
+reference fallback / no-table heuristic), autotune determinism under a
+stubbed clock, Pallas-vs-reference parity at mid-p and large-p for every
+registered Pallas aggregator, the sort-free masked bisect backend's
+parity + fill-invariance, and the ``dcq_pallas`` interpret default fix.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import agg
+from repro.agg import autotune as at
+from repro.agg import dispatch
+from repro.agg.dispatch import Decision, DispatchTable, bucket_of
+from repro.agg.kernel import clamp_block, dcq_pallas, ostat_pallas
+
+pytestmark = []
+
+
+@pytest.fixture(autouse=True)
+def _clean_dispatch_state(monkeypatch):
+    """Every test sees no env override, no injected table, cold cache."""
+    monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+    dispatch.set_table(None)
+    dispatch.clear_cache()
+    yield
+    dispatch.set_table(None)
+    dispatch.clear_cache()
+
+
+def _table(platform="cpu"):
+    t = DispatchTable(platform)
+    t.record("median", 320, 8, 10, "reference", 0.001)
+    t.record("median", 320, 8, 10, "pallas", 0.005,
+             tile=10, inner=1, n_bisect=60)
+    t.record("median", 1, 8, 262144, "pallas", 0.002,
+             tile=2048, inner=4, n_bisect=32)
+    t.record("median", 1, 8, 262144, "reference", 0.009)
+    t.record("masked:median", 1, 256, 4096, "bisect", 0.001)
+    t.record("masked:median", 1, 256, 4096, "sort", 0.004)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# table round-trip + validation
+# ---------------------------------------------------------------------------
+def test_table_round_trip(tmp_path):
+    t = _table()
+    path = t.save(tmp_path / "cpu.json")
+    back = DispatchTable.load(path)
+    assert back.platform == "cpu"
+    assert back.to_json() == t.to_json()
+    # JSON on disk is the documented schema
+    payload = json.loads(path.read_text())
+    assert payload["schema"] == dispatch.SCHEMA
+    assert set(payload) == {"schema", "platform", "meta", "entries"}
+
+
+def test_from_json_rejects_wrong_schema():
+    with pytest.raises(ValueError, match="schema"):
+        DispatchTable.from_json({"schema": "bogus/v9", "platform": "cpu"})
+
+
+def test_record_rejects_non_int_params():
+    t = DispatchTable("cpu")
+    with pytest.raises(TypeError, match="non-int"):
+        t.record("median", 1, 8, 10, "pallas", 0.001, tile=512.0)
+
+
+def test_from_json_rejects_non_int_params():
+    payload = _table().to_json()
+    key = "median|" + bucket_of(1, 8, 262144)
+    payload["entries"][key]["backends"]["pallas"]["params"]["tile"] = 2048.0
+    with pytest.raises(ValueError, match="non-int"):
+        DispatchTable.from_json(payload)
+
+
+def test_best_recomputed_per_record():
+    t = DispatchTable("cpu")
+    t.record("mean", 1, 8, 10, "pallas", 0.005, tile=10, inner=1)
+    assert t.best("mean", 1, 8, 10)[0] == "pallas"
+    t.record("mean", 1, 8, 10, "reference", 0.001)
+    assert t.best("mean", 1, 8, 10) == ("reference", {})
+
+
+# ---------------------------------------------------------------------------
+# shape-bucketed lookup
+# ---------------------------------------------------------------------------
+def test_bucket_of_floor_log2():
+    assert bucket_of(320, 8, 10) == "B8:m3:p3"
+    assert bucket_of(1, 8, 262144) == "B0:m3:p18"
+    # degenerate axes clamp to bucket 0
+    assert bucket_of(0, 1, 1) == "B0:m0:p0"
+
+
+def test_lookup_covers_power_of_two_neighbourhood():
+    t = _table()
+    # (300, 9, 11) shares the (320, 8, 10) bucket: B8:m3:p3
+    assert t.best("median", 300, 9, 11) == ("reference", {})
+    # crossing a power of two leaves the bucket
+    assert t.best("median", 300, 9, 16) is None
+
+
+# ---------------------------------------------------------------------------
+# decide(): the three-tier backend=None policy
+# ---------------------------------------------------------------------------
+def test_decide_table_hit_returns_measured_best():
+    dispatch.set_table(_table(), platform="cpu")
+    d = dispatch.decide("median", 1, 8, 262144, platform="cpu")
+    assert d == Decision("pallas", {"tile": 2048, "inner": 4,
+                                    "n_bisect": 32}, True, "table")
+
+
+def test_decide_unmeasured_bucket_falls_back_to_reference():
+    dispatch.set_table(_table(), platform="cpu")
+    d = dispatch.decide("median", 1, 8, 999999, platform="cpu")
+    assert d.backend == "reference"
+    assert d.source == "fallback-unmeasured"
+    assert not d.measured
+    # masked ops fall back to the contractual sort form instead
+    dm = dispatch.decide("masked:dcq", 1, 256, 7, platform="cpu")
+    assert (dm.backend, dm.source) == ("sort", "fallback-unmeasured")
+
+
+def test_decide_no_table_uses_platform_heuristic():
+    d = dispatch.decide("median", 1, 8, 10, platform="tpu")
+    assert (d.backend, d.source) == ("pallas", "fallback-no-table")
+    d = dispatch.decide("median", 1, 8, 10, platform="nosuch")
+    assert d.backend == "reference"
+    d = dispatch.decide("masked:median", 1, 256, 10, platform="nosuch")
+    assert d.backend == "sort"
+
+
+def test_env_var_override_loads_custom_table(tmp_path, monkeypatch):
+    t = _table()
+    t.record("mean", 1, 8, 10, "reference", 0.001)
+    path = t.save(tmp_path / "tuned.json")
+    monkeypatch.setenv(dispatch.ENV_VAR, str(path))
+    dispatch.clear_cache()
+    d = dispatch.decide("mean", 1, 8, 10, platform="cpu")
+    assert d.source == "table"
+
+
+def test_platform_mismatch_table_is_ignored(tmp_path, monkeypatch):
+    path = _table(platform="cpu").save(tmp_path / "t.json")
+    monkeypatch.setenv(dispatch.ENV_VAR, str(path))
+    dispatch.clear_cache()
+    # a cpu table must not steer a (hypothetical) tpu run
+    d = dispatch.decide("median", 320, 8, 10, platform="tpu")
+    assert d.source == "fallback-no-table"
+
+
+# ---------------------------------------------------------------------------
+# aggregate()/aggregate_batched() route backend=None through the table
+# ---------------------------------------------------------------------------
+def test_aggregate_batched_uses_table_decision():
+    plat = jax.default_backend()
+    v = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 64))
+    ref = agg.aggregate_batched(v, method="median", backend="reference")
+
+    t = DispatchTable(plat)
+    t.record("median", 2, 8, 64, "pallas", 0.001,
+             tile=64, inner=1, n_bisect=60)
+    t.record("median", 2, 8, 64, "reference", 0.009)
+    dispatch.set_table(t, platform=plat)
+    auto = agg.aggregate_batched(v, method="median")     # backend=None
+    assert jnp.max(jnp.abs(auto - ref)) == 0.0
+
+    # unmeasured bucket: table present -> reference fallback, still exact
+    v2 = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 4096))
+    auto2 = agg.aggregate_batched(v2, method="median")
+    ref2 = agg.aggregate_batched(v2, method="median", backend="reference")
+    assert jnp.array_equal(auto2, ref2)
+
+
+def test_aggregate_masked_uses_table_decision():
+    plat = jax.default_backend()
+    buf = jax.random.normal(jax.random.PRNGKey(2), (64, 33))
+    fill = jnp.int32(41)
+    srt = agg.aggregate_masked(buf, fill, method="median", backend="sort")
+
+    t = DispatchTable(plat)
+    t.record("masked:median", 1, 64, 33, "bisect", 0.001)
+    t.record("masked:median", 1, 64, 33, "sort", 0.009)
+    dispatch.set_table(t, platform=plat)
+    auto = agg.aggregate_masked(buf, fill, method="median")
+    assert float(jnp.max(jnp.abs(auto - srt))) < 1e-5
+
+
+def test_wire_aggregate_masked_backend_passthrough():
+    from repro.core.transport import wire_aggregate
+    buf = jax.random.normal(jax.random.PRNGKey(9), (32, 11))
+    fill = jnp.int32(21)
+    srt = wire_aggregate(buf, "median", fill=fill, backend="sort")
+    bis = wire_aggregate(buf, "median", fill=fill, backend="bisect")
+    assert float(jnp.max(jnp.abs(srt - bis))) < 1e-5
+    # pytree leaves route the same backend choice
+    tree = {"w": buf, "b": buf[:, :3]}
+    out = wire_aggregate(tree, "median", fill=fill, backend="bisect")
+    assert set(out) == {"w", "b"}
+
+
+def test_forced_bisect_without_form_raises():
+    buf = jnp.zeros((8, 3))
+    with pytest.raises(ValueError, match="sort-free"):
+        agg.aggregate_masked(buf, jnp.int32(4), method="trimmed",
+                             backend="bisect", trim_beta=0.2)
+
+
+# ---------------------------------------------------------------------------
+# autotune determinism under a stubbed clock
+# ---------------------------------------------------------------------------
+class _StubClock:
+    """perf_counter stand-in advancing a fixed tick per call."""
+
+    def __init__(self, tick=0.001):
+        self.t, self.tick = 0.0, tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+
+def test_autotune_deterministic_under_fixed_clock():
+    runs = []
+    for _ in range(2):
+        t = at.autotune(ops=["median"], shapes=((2, 8, 32),), platform="cpu",
+                        reps=1, timer=_StubClock(), include_masked=False,
+                        verbose=False)
+        runs.append(json.dumps(t.to_json(), sort_keys=True))
+    assert runs[0] == runs[1]
+    payload = json.loads(runs[0])
+    entry = payload["entries"]["median|" + bucket_of(2, 8, 32)]
+    assert set(entry["backends"]) == {"reference", "pallas"}
+    assert entry["best"] in entry["backends"]
+    params = entry["backends"]["pallas"]["params"]
+    assert all(isinstance(params[k], int) for k in params)
+
+
+def test_autotune_masked_records_both_backends():
+    t = at.autotune(ops=[], shapes=((1, 8, 16),), platform="cpu", reps=1,
+                    timer=_StubClock(), masked_capacity=16, verbose=False)
+    entry = t.entries["masked:median|" + bucket_of(1, 16, 16)]
+    assert set(entry["backends"]) >= {"sort", "bisect"}
+
+
+def test_pallas_candidates_respect_clamp():
+    for tile, inner, nb in at._pallas_candidates("median", 8, 4096):
+        ct, ci = clamp_block(8, 4096, tile, inner)
+        assert (ct, ci) == (tile, inner)
+        assert all(isinstance(x, int) for x in (tile, inner, nb))
+
+
+# ---------------------------------------------------------------------------
+# kernel parity at mid-p / large-p for every registered Pallas aggregator
+# ---------------------------------------------------------------------------
+_PALLAS_OPS = [n for n in agg.registered() if agg.has_pallas(n)]
+
+
+@pytest.mark.parametrize("op", _PALLAS_OPS)
+def test_pallas_matches_reference_mid_p(op):
+    a = agg.get_aggregator(op)
+    v = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4096)) * 3.0
+    scale = (jnp.abs(jax.random.normal(jax.random.PRNGKey(1),
+                                       (2, 4096))) + 0.1
+             if a.needs_scale else None)
+    ref = a.reference(v, scale=scale, K=10, trim_beta=0.2, axis=-2)
+    out = ostat_pallas(v, op, scale, K=10, trim_beta=0.2,
+                       tile=1024, inner=2, n_bisect=60)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+def test_pallas_matches_reference_large_p():
+    # one model-gradient-sized problem; tile*inner caps the VMEM block
+    v = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 262144))
+    ref = agg.get_aggregator("median").reference(
+        v, scale=None, K=10, trim_beta=0.2, axis=-2)
+    out = ostat_pallas(v, "median", None, tile=2048, inner=4, n_bisect=60)
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+
+def test_clamp_block_bounds_vmem():
+    from repro.agg.kernel import VMEM_BUDGET_BYTES
+    for p in (10, 4096, 262144, 1 << 22):
+        for tile in (256, 2048, 1 << 20):
+            for inner in (1, 4, 64):
+                ct, ci = clamp_block(8, p, tile, inner)
+                assert 8 * ct * ci * 4 <= max(VMEM_BUDGET_BYTES,
+                                              8 * ct * 4)
+                assert ct >= 1 and ci >= 1
+
+
+def test_tuned_n_bisect_changes_cost_not_result():
+    v = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 128))
+    full = ostat_pallas(v, "median", None, n_bisect=60)
+    short = ostat_pallas(v, "median", None, n_bisect=32)
+    # 32 halvings of a ~[-4, 4] range is ~1e-9 resolution: same answer
+    assert float(jnp.max(jnp.abs(full - short))) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# masked bisect backend: parity + fill-invariance
+# ---------------------------------------------------------------------------
+_BISECT_RULES = [n for n in agg.registered()
+                 if agg.get_aggregator(n).masked_bisect is not None]
+
+
+@pytest.mark.parametrize("rule", _BISECT_RULES)
+@pytest.mark.parametrize("fill", [1, 7, 40, 64])
+def test_masked_bisect_matches_sort(rule, fill):
+    a = agg.get_aggregator(rule)
+    buf = jax.random.normal(jax.random.PRNGKey(3), (64, 33)) * 2.0
+    scale = (jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (33,))) + 0.1
+             if a.needs_scale else None)
+    srt = agg.aggregate_masked(buf, jnp.int32(fill), method=rule,
+                               scale=scale, backend="sort")
+    bis = agg.aggregate_masked(buf, jnp.int32(fill), method=rule,
+                               scale=scale, backend="bisect")
+    assert float(jnp.max(jnp.abs(srt - bis))) < 1e-4
+
+
+@pytest.mark.parametrize("rule", _BISECT_RULES)
+def test_masked_bisect_fill_invariance(rule):
+    a = agg.get_aggregator(rule)
+    fill = 41
+    buf = jax.random.normal(jax.random.PRNGKey(5), (64, 17))
+    scale = (jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (17,))) + 0.1
+             if a.needs_scale else None)
+    garbage = buf.at[fill:].set(jnp.inf)    # stale tail must never be read
+    f = jnp.int32(fill)
+    clean = agg.aggregate_masked(buf, f, method=rule, scale=scale,
+                                 backend="bisect")
+    dirty = agg.aggregate_masked(garbage, f, method=rule, scale=scale,
+                                 backend="bisect")
+    assert jnp.array_equal(clean, dirty), (
+        "bisect masked form read past fill")
+
+
+# ---------------------------------------------------------------------------
+# satellites: dcq_pallas interpret default, committed cpu table sanity
+# ---------------------------------------------------------------------------
+def test_dcq_pallas_interpret_default_auto_selects():
+    import inspect
+    sig = inspect.signature(dcq_pallas)
+    assert sig.parameters["interpret"].default is None, (
+        "dcq_pallas must auto-select interpret mode off-TPU, "
+        "not hardcode True")
+    # and it actually runs under the auto default on this platform
+    v = jax.random.normal(jax.random.PRNGKey(7), (8, 32))
+    out = dcq_pallas(v, K=10)
+    assert out.shape == (32,)
+
+
+def test_committed_cpu_table_loads_and_serves():
+    path = dispatch.TABLE_DIR / "cpu.json"
+    assert path.is_file(), "committed CPU dispatch table is missing"
+    t = DispatchTable.load(path)
+    assert t.platform == "cpu"
+    # the sweep regime bucket must be measured (it gates BENCH_agg)
+    assert t.best("median", 320, 8, 10) is not None
+    # every recorded param is an int (jit static-arg hygiene)
+    for entry in t.entries.values():
+        for rec in entry["backends"].values():
+            for v in rec.get("params", {}).values():
+                assert isinstance(v, int)
