@@ -1,0 +1,165 @@
+"""Accountant-trend panels: MRSE vs eps, one line per privacy accountant.
+
+Consumes the sweep artifacts the nightly ``accountant-sweep`` job emits
+(``experiments/sweep_smoke_<accountant>.json``, one per repro.privacy
+registry entry) and renders a panel grid — one panel per
+(problem, attack, aggregator) cell of the grid, MRSE-vs-eps curves
+overlaid per accountant — so a tighter accountant's smaller calibrated
+sigma is visible as a downward shift of the whole curve, night over
+night. A machine-readable summary (per-accountant mean
+``sigma_ratio_vs_basic`` and per-panel curve data) is always written
+next to the figure; the PNG itself needs matplotlib and is skipped with
+a warning when the plotting stack is absent, so the job still publishes
+the trend table on a minimal runner.
+
+  python -m benchmarks.plot_trends \
+      experiments/sweep_smoke_basic.json \
+      experiments/sweep_smoke_advanced.json \
+      experiments/sweep_smoke_rdp.json \
+      --out trends/accountant_trends.png
+
+Artifacts that share scenarios (same grid, different ``--accountant``
+override) line up by the panel key, not by scenario_id — non-basic
+accountants get a distinct id segment by design (sweep/grid.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+
+from repro.sweep import artifact as artifact_mod
+
+#: y-axis metric per scenario kind: protocol scenarios report the paper's
+#: MRSE triple, train scenarios an accuracy.
+_METRICS = ("mrse_qn", "accuracy")
+
+
+def _panel_key(row):
+    """One panel per grid cell; eps and accountant vary inside it."""
+    return (str(row.get("problem", row.get("arch", "?"))),
+            str(row.get("attack", "none")),
+            str(row.get("aggregator", "?")),
+            float(row.get("byz_frac", 0.0)))
+
+
+def _metric(row):
+    for name in _METRICS:
+        if name in row:
+            return name, float(row[name])
+    return None, None
+
+
+def collect(paths):
+    """{panel_key: {accountant: [(eps, value), ...]}} plus the
+    per-accountant mean sigma ratio over every scenario that carried one."""
+    panels = defaultdict(lambda: defaultdict(list))
+    ratios = defaultdict(list)
+    metric_name = "mrse_qn"
+    for path in paths:
+        art = artifact_mod.load(path)
+        for row in artifact_mod.rows(art):
+            name, val = _metric(row)
+            if name is None:
+                continue
+            metric_name = name
+            acct = str(row.get("accountant", "basic"))
+            panels[_panel_key(row)][acct].append(
+                (float(row["eps_total"]), val))
+            ratios[acct].append(float(row.get("sigma_ratio_vs_basic", 1.0)))
+    for by_acct in panels.values():
+        for curve in by_acct.values():
+            curve.sort()
+    return panels, ratios, metric_name
+
+
+def summary_dict(panels, ratios, metric_name):
+    return {
+        "metric": metric_name,
+        "accountants": sorted({a for c in panels.values() for a in c}),
+        "mean_sigma_ratio_vs_basic": {
+            a: sum(r) / len(r) for a, r in sorted(ratios.items())},
+        "panels": [
+            {"problem": k[0], "attack": k[1], "aggregator": k[2],
+             "byz_frac": k[3],
+             "curves": {a: [[e, v] for e, v in pts]
+                        for a, pts in sorted(by_acct.items())}}
+            for k, by_acct in sorted(panels.items())],
+    }
+
+
+def render(panels, metric_name, out_png):
+    try:
+        import matplotlib
+    except ImportError:
+        print("plot_trends: matplotlib unavailable, skipping PNG "
+              f"({out_png}); the JSON summary still has every curve",
+              file=sys.stderr)
+        return False
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    keys = sorted(panels)
+    n = len(keys)
+    ncols = min(3, max(1, n))
+    nrows = (n + ncols - 1) // ncols
+    fig, axes = plt.subplots(nrows, ncols, squeeze=False,
+                             figsize=(4.2 * ncols, 3.2 * nrows))
+    for ax in axes.flat[n:]:
+        ax.set_axis_off()
+    for ax, key in zip(axes.flat, keys):
+        problem, attack, aggregator, byz = key
+        for acct, pts in sorted(panels[key].items()):
+            eps = [e for e, _ in pts]
+            val = [v for _, v in pts]
+            ax.plot(eps, val, marker="o", label=acct)
+        ax.set_title(f"{problem} / {attack} / {aggregator}"
+                     + (f" / byz={byz:g}" if byz else ""), fontsize=8)
+        ax.set_xlabel("eps (total)", fontsize=8)
+        ax.set_ylabel(metric_name, fontsize=8)
+        ax.set_yscale("log")
+        ax.tick_params(labelsize=7)
+        ax.legend(fontsize=7)
+    fig.tight_layout()
+    fig.savefig(out_png, dpi=120)
+    plt.close(fig)
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.plot_trends",
+        description="MRSE-vs-eps panels per privacy accountant from "
+                    "sweep artifacts (nightly accountant-sweep).")
+    ap.add_argument("artifacts", nargs="+",
+                    help="sweep artifact JSON paths (one per accountant)")
+    ap.add_argument("--out", default="trends/accountant_trends.png",
+                    help="output figure path; the JSON summary lands "
+                         "beside it with a .json suffix")
+    args = ap.parse_args(argv)
+
+    panels, ratios, metric_name = collect(args.artifacts)
+    if not panels:
+        print("plot_trends: no plottable scenarios in "
+              f"{args.artifacts}", file=sys.stderr)
+        return 1
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    out_json = os.path.splitext(args.out)[0] + ".json"
+    summary = summary_dict(panels, ratios, metric_name)
+    with open(out_json, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"wrote {out_json} ({len(panels)} panel(s), accountants: "
+          f"{', '.join(summary['accountants'])})")
+    for acct, ratio in summary["mean_sigma_ratio_vs_basic"].items():
+        print(f"  {acct:>10}: mean sigma ratio vs basic {ratio:.3f}")
+    if render(panels, metric_name, args.out):
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

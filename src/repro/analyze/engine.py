@@ -86,6 +86,11 @@ def analyze_paths(paths: list, rules: list | None = None,
     rule_objs = [get_rule(name) for name in rule_names]
 
     active, suppressed = [], []
+    # unused-suppression has no per-module check; the engine decides it
+    # here, after matching, and only for waivers whose rule actually ran
+    # this invocation (a --rules subset must not flag waivers of the
+    # rules it skipped).
+    check_unused = "unused-suppression" in rule_names
     for path in files:
         mod = graph.modules.get(path)
         if mod is None:
@@ -103,14 +108,40 @@ def analyze_paths(paths: list, rules: list | None = None,
                     rule="suppression", path=path, line=s.line, col=0,
                     message="suppression without a reason; write "
                             "# repro: allow(<rule>) — <why>"))
+        matched = set()               # (Suppression, rule name) pairs
         for rule in rule_objs:
             for f in rule.check(mod, graph):
                 s = suppress.match(f.rule, f.line, sups, mod.lines)
+                if s is not None:
+                    matched.add((s, f.rule))
                 if s is not None and s.reason:
                     suppressed.append(dataclasses.replace(
                         f, suppressed=True, reason=s.reason))
                 else:
                     active.append(f)
+        if check_unused:
+            for s in sups:
+                for rname in s.rules:
+                    if rname in ("suppression", "unused-suppression"):
+                        continue      # flagged elsewhere / self-waiver
+                    if rname not in rule_names or rname not in registered():
+                        continue      # rule skipped or unknown this run
+                    if (s, rname) in matched:
+                        continue
+                    f = Finding(
+                        rule="unused-suppression", path=path, line=s.line,
+                        col=0,
+                        message=f"# repro: {s.kind}({rname}) silenced no "
+                                f"{rname!r} finding — stale waiver; remove "
+                                "it (or add unused-suppression to the "
+                                "rule list if it is prophylactic)")
+                    cover = suppress.match("unused-suppression", s.line,
+                                           sups, mod.lines)
+                    if cover is not None and cover.reason:
+                        suppressed.append(dataclasses.replace(
+                            f, suppressed=True, reason=cover.reason))
+                    else:
+                        active.append(f)
     return Report(roots=list(paths), files=files, findings=active,
                   suppressed=suppressed)
 

@@ -644,3 +644,15 @@ register(Rule(
     doc="no float-valued or unhashable expressions in the static-argument "
         "slots of jitted calls: statics are compile-cache keys and "
         "silently retrace (or raise) per value"))
+# The check lives in the engine, not here: whether a suppression matched
+# anything is only known after every other rule has run and the engine
+# has done the suppression matching. This registration gives the rule a
+# stable name for --rules/--list-rules and lets ``# repro:
+# allow(<rule>, unused-suppression) — <why>`` self-waive a deliberately
+# prophylactic marker.
+register(Rule(
+    name="unused-suppression", check=lambda mod, graph: [],
+    doc="every # repro: allow(<rule>) must silence at least one finding "
+        "of that rule; a waiver whose rule ran but never fired is stale "
+        "and must be removed (suppress with allow(<rule>, "
+        "unused-suppression) when intentionally prophylactic)"))

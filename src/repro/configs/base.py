@@ -149,6 +149,10 @@ class TreeProtocolConfig:
     aggregator: str = "dcq_mad"
     K: int = 10
     trim_beta: float = 0.2
+    # Registry accountant (repro.privacy): how the total (eps, delta) is
+    # split/composed over the five transmissions. "basic" = the historical
+    # eps/5 split, byte-identical.
+    accountant: str = "basic"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,3 +177,7 @@ class ProtocolConfig:
     center_trust: str = "trusted"  # trusted | untrusted (paper §4.3)
     newton_steps: int = 25       # local solver iterations
     noiseless: bool = False      # ablation: no DP noise
+    # Registry accountant (repro.privacy): how the total (eps, delta) is
+    # split/composed over the transmissions. "basic" = the historical
+    # eps/5 (eps/6 untrusted) split, byte-identical.
+    accountant: str = "basic"

@@ -170,47 +170,70 @@ def tree_mean_sigma(tree_dims, n: int, gamma: float, eps_r: float,
 def calibrate_tree_sigmas(tree, n: int, eps: float, delta: float,
                           gammas=(2.0, 2.0, 2.0, 2.0, 2.0),
                           tail: str = "subexp",
-                          machine_axis: bool = False):
+                          machine_axis: bool = False,
+                          accountant: str = "basic"):
     """Per-transmission, per-leaf noise s.d. for the pytree protocol:
     ``{transmission name: pytree of sigmas}``.
 
-    The total (eps, delta) is split evenly over the five transmissions
-    (basic composition, Remark 4.5). At model scale the norm-dependent
-    refinements of Thm 4.5 (s1, s3..s5 need ``lambda_s`` and direction
-    norms) are not available before the trace, so every transmission uses
-    the sub-exponential mean mechanism (Lemma 4.4 / Thm 4.5(2)) with its
-    round's ``gamma`` — conservative but valid, and per-leaf in dimension.
+    The total (eps, delta) is split over the five transmissions by the
+    named ``accountant`` (repro.privacy registry; the default "basic" is
+    the even eps/5 split of Remark 4.5 and stays byte-identical — the
+    sigmas are never rescaled, not even by 1.0). At model scale the
+    norm-dependent refinements of Thm 4.5 (s1, s3..s5 need ``lambda_s``
+    and direction norms) are not available before the trace, so every
+    transmission uses the sub-exponential mean mechanism (Lemma 4.4 /
+    Thm 4.5(2)) with its round's ``gamma`` — conservative but valid, and
+    per-leaf in dimension.
     """
     from repro.core.transport import tree_leaf_dims
     k = len(TREE_TRANSMISSIONS)
     eps_r, delta_r = eps / k, delta / k
     dims = tree_leaf_dims(tree, machine_axis=machine_axis)
-    return {name: tree_mean_sigma(dims, n, gammas[i], eps_r, delta_r, tail)
-            for i, name in enumerate(TREE_TRANSMISSIONS)}
+    sigmas = {name: tree_mean_sigma(dims, n, gammas[i], eps_r, delta_r,
+                                    tail)
+              for i, name in enumerate(TREE_TRANSMISSIONS)}
+    if accountant != "basic":
+        from repro.privacy import multiplier_ratio
+        ratio = multiplier_ratio(accountant, eps, delta, k)
+        if ratio != 1.0:
+            sigmas = {name: jax.tree_util.tree_map(lambda s: s * ratio, t)
+                      for name, t in sigmas.items()}
+    return sigmas
 
 
 def tree_spend_ledger(tree, n: int, eps: float, delta: float,
                       gammas=(2.0, 2.0, 2.0, 2.0, 2.0),
                       tail: str = "subexp",
-                      machine_axis: bool = False) -> List[dict]:
+                      machine_axis: bool = False,
+                      accountant: str = "basic") -> List[dict]:
     """Flat per-(transmission, leaf) spend records for the artifact ledger:
-    each entry carries the leaf path, its own dimension, and the sigma that
-    dimension bought — the per-leaf calibration made auditable."""
+    each entry carries the leaf path, its own dimension, the sigma that
+    dimension bought, and the accountant that certified the per-round
+    budget — the per-leaf calibration made auditable. High-probability
+    accountants ("subexp") additionally record each leaf's Lemma 4.4
+    sensitivity failure probability."""
     from repro.core.transport import leaf_paths, tree_leaf_dims
+    from repro.privacy import get_accountant
+    acct = get_accountant(accountant)
     k = len(TREE_TRANSMISSIONS)
-    eps_r, delta_r = eps / k, delta / k
+    eps_r, delta_r = acct.per_round(eps, delta, k)
     sigmas = calibrate_tree_sigmas(tree, n, eps, delta, gammas, tail,
-                                   machine_axis)
+                                   machine_axis, accountant=accountant)
     paths = leaf_paths(tree)
     dims = jax.tree_util.tree_leaves(
         tree_leaf_dims(tree, machine_axis=machine_axis))
     records = []
-    for name in TREE_TRANSMISSIONS:
+    for i, name in enumerate(TREE_TRANSMISSIONS):
         for path, d, s in zip(paths, dims,
                               jax.tree_util.tree_leaves(sigmas[name])):
-            records.append({"transmission": name, "leaf": path,
-                            "dim": int(d), "sigma": float(s),
-                            "eps": eps_r, "delta": delta_r})
+            rec = {"transmission": name, "leaf": path,
+                   "dim": int(d), "sigma": float(s),
+                   "eps": eps_r, "delta": delta_r,
+                   "accountant": acct.name}
+            if acct.failure_prob is not None:
+                rec["failure_prob"] = acct.failure_prob(int(d), n,
+                                                        gammas[i])
+            records.append(rec)
     return records
 
 
@@ -236,6 +259,109 @@ def compose_advanced(eps: float, delta: float, k: int,
     return eps_tilde, delta_total
 
 
+#: slack grid for inverting Cor 4.1: fractions of the total delta handed
+#: to the composition slack (the rest is split over the k rounds).
+_ADVANCED_SLACK_FRACS = (0.01, 0.05, 0.1, 0.25, 0.5, 0.75, 0.9)
+
+
+def invert_advanced(eps: float, delta: float, k: int,
+                    slack_fracs=_ADVANCED_SLACK_FRACS
+                    ) -> Tuple[float, float]:
+    """Largest per-round (eps_r, delta_r) whose k-fold Cor 4.1 composition
+    stays within total (eps, delta) — the CALIBRATION direction of
+    advanced composition, best-of with the basic eps/k split.
+
+    For each slack fraction the per-round delta_r solves
+    1-(1-delta_r)^k (1-slack) = delta exactly, and eps_r is bisected on
+    the (monotone) sqrt-k bounds b/c of Cor 4.1. The basic candidate
+    (eps/k, delta/k) is always in the pool, so the result is never a
+    LARGER noise multiplier than basic; at the paper's k in {5, 6} it IS
+    basic (Cor 4.1's sqrt-k regime needs k >~ 2 ln(1/slack) ~ 23+), and
+    the strict win appears at many-round scale. Returns the candidate
+    minimizing :func:`noise_multiplier`.
+    """
+    if eps <= 0 or not (0 < delta < 1) or k < 1:
+        raise ValueError("need eps > 0, 0 < delta < 1, k >= 1")
+    best = (eps / k, delta / k)
+    for frac in slack_fracs:
+        slack = frac * delta
+        delta_r = 1.0 - ((1.0 - delta) / (1.0 - slack)) ** (1.0 / k)
+        if delta_r <= 0.0:
+            continue
+
+        def bound_bc(e: float) -> float:
+            common = (math.e ** e - 1.0) * k * e / (math.e ** e + 1.0)
+            b = common + e * math.sqrt(
+                2.0 * k * math.log(math.e + math.sqrt(k * e * e) / slack))
+            c = common + e * math.sqrt(2.0 * k * math.log(1.0 / slack))
+            return min(b, c)
+
+        lo, hi = 0.0, eps          # bound_bc(eps) > eps in any DP regime
+        for _ in range(100):
+            mid = 0.5 * (lo + hi)
+            if bound_bc(mid) <= eps:
+                lo = mid
+            else:
+                hi = mid
+        if lo > 0.0 and noise_multiplier(lo, delta_r) \
+                < noise_multiplier(*best):
+            best = (lo, delta_r)
+    return best
+
+
+# --------------------------------------------------------- Renyi accounting
+
+def rdp_gaussian_epsilon(mu: float, alpha: float, k: int = 1) -> float:
+    """Renyi-DP curve of k composed Gaussian mechanisms at noise
+    multiplier mu (sigma = mu * sensitivity): eps_alpha = k alpha/(2 mu^2)
+    (Mironov 2017, Prop 7 + additivity under composition)."""
+    return k * alpha / (2.0 * mu * mu)
+
+
+def rdp_to_dp(eps_alpha: float, alpha: float, delta: float) -> float:
+    """Tight RDP -> (eps, delta) conversion (Canonne–Kamath–Steinke '20 /
+    Balle et al. '20): eps = eps_alpha + log((alpha-1)/alpha)
+    - (log delta + log alpha)/(alpha - 1). Requires alpha > 1."""
+    if alpha <= 1.0:
+        raise ValueError("RDP order alpha must exceed 1")
+    return (eps_alpha + math.log((alpha - 1.0) / alpha)
+            - (math.log(delta) + math.log(alpha)) / (alpha - 1.0))
+
+
+#: default RDP order grid: dense near 1 (tiny budgets), log-spread above.
+RDP_ALPHAS = tuple([1.0 + x / 10.0 for x in range(1, 10)]
+                   + list(range(2, 64)) + [80, 128, 256, 512, 1024])
+
+
+def rdp_total_epsilon(mu: float, k: int, delta: float,
+                      alphas=RDP_ALPHAS) -> float:
+    """(eps, delta) guarantee of k composed Gaussian releases at noise
+    multiplier mu: the tight conversion optimized over the order grid."""
+    return min(rdp_to_dp(rdp_gaussian_epsilon(mu, a, k), a, delta)
+               for a in alphas)
+
+
+def calibrate_rdp_multiplier(eps: float, delta: float, k: int) -> float:
+    """Smallest per-round noise multiplier mu such that k Gaussian
+    releases at sigma = mu * sensitivity compose to (eps, delta)-DP under
+    RDP with the tight conversion. Bisection (total eps is monotone
+    decreasing in mu); host-side Python floats only."""
+    if eps <= 0 or not (0 < delta < 1) or k < 1:
+        raise ValueError("need eps > 0, 0 < delta < 1, k >= 1")
+    lo, hi = 1e-4, 1.0
+    while rdp_total_epsilon(hi, k, delta) > eps:
+        hi *= 2.0
+        if hi > 1e10:
+            raise ValueError(f"no Gaussian multiplier reaches eps={eps}")
+    for _ in range(100):
+        mid = 0.5 * (lo + hi)
+        if rdp_total_epsilon(mid, k, delta) > eps:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
 # ---------------------------------------------------------------- accountant
 
 @dataclasses.dataclass
@@ -258,6 +384,10 @@ class PrivacyAccountant:
 
     def __init__(self) -> None:
         self.records: List[QueryRecord] = []
+        #: audit annotations (e.g. the advanced-composition fallback) —
+        #: part of the ledger, surfaced by ``summary()``.
+        self.notes: List[str] = []
+        self._warned_advanced_fallback = False
 
     def spend(self, name: str, eps: float, delta: float, sigma: float,
               failure_prob: float = 0.0) -> None:
@@ -284,13 +414,33 @@ class PrivacyAccountant:
         return compose_basic([(r.eps, r.delta) for r in self.records])
 
     def total_advanced(self, slack: float = 1e-3) -> Tuple[float, float]:
+        """Cor 4.1 total when all rounds share one (eps, delta).
+
+        Heterogeneous budgets fall OUTSIDE Cor 4.1's hypothesis, so the
+        total falls back to basic composition — but never silently: the
+        fallback is recorded as a ledger note and warned once per
+        accountant (regression: tests/test_dp.py)."""
         if not self.records:
             return 0.0, 0.0
         eps0 = self.records[0].eps
         delta0 = self.records[0].delta
         if any(abs(r.eps - eps0) > 1e-12 or abs(r.delta - delta0) > 1e-12
                for r in self.records):
-            # heterogeneous budgets: fall back to basic
+            note = ("advanced composition fell back to basic: "
+                    f"heterogeneous per-round budgets over "
+                    f"{len(self.records)} records "
+                    f"(eps range [{min(r.eps for r in self.records):.4g}, "
+                    f"{max(r.eps for r in self.records):.4g}])")
+            if note not in self.notes:
+                self.notes.append(note)
+            if not self._warned_advanced_fallback:
+                import warnings
+                warnings.warn(
+                    "PrivacyAccountant.total_advanced: per-round budgets "
+                    "are heterogeneous, which Cor 4.1 does not cover — "
+                    "reporting the basic-composition total instead (noted "
+                    "in accountant.notes)", RuntimeWarning, stacklevel=2)
+                self._warned_advanced_fallback = True
             return self.total_basic()
         return compose_advanced(eps0, delta0, len(self.records), slack)
 
@@ -306,4 +456,5 @@ class PrivacyAccountant:
         lines.append(f"basic composition:    ({e_b:.4g}, {d_b:.4g})")
         lines.append(f"advanced composition: ({e_a:.4g}, {d_a:.4g})")
         lines.append(f"sensitivity failure prob <= {self.total_failure_prob():.3g}")
+        lines.extend(f"note: {n}" for n in self.notes)
         return "\n".join(lines)

@@ -116,8 +116,24 @@ def round_budget(cfg: ProtocolConfig) -> Tuple[float, float]:
     return cfg.eps / k, cfg.delta / k
 
 
+def accountant_round_budget(cfg: ProtocolConfig) -> Tuple[float, float]:
+    """Per-transmission budget certified by ``cfg.accountant``.
+
+    ``"basic"`` routes through :func:`round_budget` unchanged (the exact
+    historical floats); other registry entries invert their composition
+    host-side (repro.privacy) — e.g. "rdp" records the LARGER standalone
+    per-round eps whose Renyi composition still totals (cfg.eps,
+    cfg.delta).
+    """
+    if cfg.accountant == "basic":
+        return round_budget(cfg)
+    from repro.privacy import get_accountant
+    return get_accountant(cfg.accountant).per_round(
+        cfg.eps, cfg.delta, n_transmissions(cfg))
+
+
 def calibrate_sigma_base(cfg: ProtocolConfig, p: int, n: int,
-                         eps=None, delta=None) -> Tuple:
+                         eps=None, delta=None, accountant=None) -> Tuple:
     """Per-transmission BASE noise sds (norm factors = 1), aligned with
     ``transmission_names``. The budget dependence of Algorithm 1's noise
     calibration lives entirely in these scalars, so the sweep executor can
@@ -128,10 +144,16 @@ def calibrate_sigma_base(cfg: ProtocolConfig, p: int, n: int,
 
     ``eps``/``delta`` override the totals in ``cfg``; Python floats keep
     exact ``math`` arithmetic, traced scalars route through the dual-mode
-    dp.py calibration.
+    dp.py calibration. ``accountant`` overrides ``cfg.accountant``: the
+    basic Thm 4.5 sds are scaled by the accountant's noise-multiplier
+    ratio vs basic (repro.privacy). "basic"/"subexp" sds are NEVER
+    rescaled (ratio is the literal 1.0 and the multiply is skipped), so
+    the default stays byte-identical to the committed golden; non-basic
+    accountants bisect host-side and therefore need Python-float budgets.
     """
     eps_t = cfg.eps if eps is None else eps
     delta_t = cfg.delta if delta is None else delta
+    acct = cfg.accountant if accountant is None else accountant
     k = n_transmissions(cfg)
     eps_r, delta_r = eps_t / k, delta_t / k
     nl = cfg.noiseless
@@ -146,12 +168,33 @@ def calibrate_sigma_base(cfg: ProtocolConfig, p: int, n: int,
     out = [s1, s2, s3, s4, s5]
     if cfg.center_trust == "untrusted":
         out.insert(2, dp.s6_variance(p, n, 1.0, eps_r, delta_r))
+    if acct != "basic":
+        from repro.privacy import multiplier_ratio
+        ratio = multiplier_ratio(acct, eps_t, delta_t, k)
+        if ratio != 1.0:
+            out = [s * ratio for s in out]
     return tuple(out)
 
 
 def _failure_probs(cfg: ProtocolConfig, p: int, n: int) -> Tuple[float, ...]:
     """Per-transmission sensitivity-failure probabilities (Lemmas 4.3/4.4),
-    aligned with ``transmission_names``. Static in shapes and config."""
+    aligned with ``transmission_names``. Static in shapes and config.
+
+    High-probability accountants ("subexp") record the Lemma 4.4 failure
+    probability for EVERY mean-mechanism transmission — each of R1..R5 is
+    a release whose sensitivity bound only holds on the tail event; other
+    accountants keep the historical R1/R2 records.
+    """
+    if cfg.accountant != "basic":
+        from repro.privacy import get_accountant
+        acct = get_accountant(cfg.accountant)
+        if acct.failure_prob is not None:
+            probs = [acct.failure_prob(p, n, g) for g in cfg.gammas]
+            if cfg.center_trust == "untrusted":
+                # Thm 4.6 variance release: sub-Gaussian bound at gamma=1.
+                probs.insert(2, dp.mean_dp_failure_prob_subgauss(p, n,
+                                                                 1.0, 1.0))
+            return tuple(probs)
     f1 = dp.mean_dp_failure_prob_subexp(p, n, cfg.gammas[0], 1.0, 1.0)
     f2 = dp.mean_dp_failure_prob_subexp(p, n, cfg.gammas[1], 1.0, 1.0)
     probs = [f1, f2, 0.0, 0.0, 0.0]
@@ -216,8 +259,12 @@ def protocol_rounds(key: jax.Array, X: jnp.ndarray, y: jnp.ndarray,
     prob = problem
     m_plus_1, n, p = X.shape
     if eps is None and delta is None:
-        eps_r, delta_r = round_budget(cfg)      # exact Python floats
+        eps_r, delta_r = accountant_round_budget(cfg)  # exact Python floats
     else:
+        # Traced-budget path (the sweep's vmap axis): the ledger arrays
+        # carry the basic eps/k share — the per-transmission budget a
+        # non-basic accountant certifies is not traceable (bisection), so
+        # the executor records it host-side in the artifact spend record.
         k_tx = n_transmissions(cfg)
         eps_r = (cfg.eps if eps is None else eps) / k_tx
         delta_r = (cfg.delta if delta is None else delta) / k_tx
@@ -475,7 +522,8 @@ def protocol_tree_rounds(key: jax.Array, theta, batches, grad_fn,
             raise ValueError("per-leaf DP calibration needs n (samples per "
                              "machine) when sigmas are not supplied")
         sigmas = dp.calibrate_tree_sigmas(theta, n, cfg.eps, cfg.delta,
-                                          cfg.gammas, cfg.tail)
+                                          cfg.gammas, cfg.tail,
+                                          accountant=cfg.accountant)
     if sigmas is None:
         sigmas = {name: 0.0 for name in dp.TREE_TRANSMISSIONS}
     if byz_mask is None:
@@ -594,7 +642,7 @@ class DPQNProtocol:
         any traced region. eps/delta come from the static budget split
         (exact Python floats); sigmas/failure probs from the ledger arrays."""
         names = transmission_names(self.cfg)
-        eps_r, delta_r = round_budget(self.cfg)
+        eps_r, delta_r = accountant_round_budget(self.cfg)
         acct = dp.PrivacyAccountant()
         noise_sd: Dict[str, float] = {}
         for i, name in enumerate(names):

@@ -22,6 +22,12 @@ def add_common_flags(ap: argparse.ArgumentParser,
                     "independent fold_in streams (repro.core.keys)")
     ap.add_argument("--sharded", action="store_true",
                     help="shard the machine axis over all visible devices")
+    from repro.privacy import registered as registered_accountants
+    ap.add_argument("--accountant", default="basic",
+                    choices=registered_accountants(),
+                    help="repro.privacy accountant splitting the total "
+                    "(eps, delta) over the DP transmissions (default: "
+                    "basic, the paper's even split)")
     return ap
 
 

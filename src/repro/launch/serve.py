@@ -105,7 +105,7 @@ def main(argv=None):
     scfg = ServeConfig(method=args.agg, capacity=args.machines,
                        lr=args.lr, eps=args.eps, delta=args.delta,
                        ingest_block=min(args.ingest_block, args.machines),
-                       seed=args.seed)
+                       seed=args.seed, accountant=args.accountant)
     policy = FlushPolicy(min_fill=args.min_fill)
     svc = AggregationService(params, scfg, policy=policy,
                              sharding=sharding)

@@ -103,7 +103,8 @@ def main(argv=None):
         qcfg = QNTrainConfig(
             n_machines=args.machines, attack=attack,
             protocol=TreeProtocolConfig(hist=args.hist, lr=args.lr,
-                                        eps=args.eps, aggregator=agg))
+                                        eps=args.eps, aggregator=agg,
+                                        accountant=args.accountant))
         trainer = QNTrainer(model, qcfg, mesh=mesh)
     else:
         tcfg = TrainConfig(

@@ -1,0 +1,18 @@
+"""repro.privacy: the pluggable privacy-accountant registry.
+
+>>> from repro import privacy
+>>> privacy.registered()
+('advanced', 'basic', 'rdp', 'subexp')
+>>> privacy.multiplier_ratio("rdp", 5.0, 1e-5, 6)   # sigma vs basic
+0.377...
+
+See ``repro.privacy.registry`` for the Accountant contract and
+``repro.privacy.accountants`` for the four entries.
+"""
+from repro.privacy.registry import (Accountant, get_accountant,
+                                    multiplier_ratio, register, registered,
+                                    resolve)
+from repro.privacy import accountants as _accountants  # noqa: F401  (registers)
+
+__all__ = ["Accountant", "get_accountant", "multiplier_ratio", "register",
+           "registered", "resolve"]

@@ -64,6 +64,13 @@ class ServeConfig:
     ingest_block: int = 64
     #: root seed for the per-round noise keys ("serve" stream).
     seed: int = 0
+    #: repro.privacy registry accountant. The serving wire is ONE
+    #: transmission per round (k=1), so only the accountant's
+    #: single-release conversion matters — "rdp"'s tight conversion still
+    #: buys a strictly smaller sigma than the paper's Lemma 2.1-style
+    #: multiplier; "basic"/"subexp" are byte-identical to the historical
+    #: calibration.
+    accountant: str = "basic"
     #: masked aggregation form: "sort", "bisect", or None to consult the
     #: measured dispatch table (repro.agg.dispatch) for this platform.
     masked_backend: Optional[str] = None
@@ -103,10 +110,18 @@ class AggregationService:
         self._paths = leaf_paths(template)
         self._dims = [int(d) for d in jax.tree_util.tree_leaves(
             tree_leaf_dims(template))]
+        from repro.privacy import get_accountant, multiplier_ratio
+        self._acct = get_accountant(cfg.accountant)   # validates the name
         if cfg.eps > 0:
             self._sigma = tree_mean_sigma(tree_leaf_dims(template),
                                           cfg.dp_n, cfg.dp_gamma, cfg.eps,
                                           cfg.delta, cfg.dp_tail)
+            if cfg.accountant != "basic":
+                ratio = multiplier_ratio(cfg.accountant, cfg.eps,
+                                         cfg.delta, 1)
+                if ratio != 1.0:
+                    self._sigma = jax.tree_util.tree_map(
+                        lambda s: s * ratio, self._sigma)
         else:
             self._sigma = None
 
@@ -235,7 +250,12 @@ class AggregationService:
              "dim": d, "sigma": s,
              "eps": cfg.eps if self._sigma is not None else 0.0,
              "delta": cfg.delta if self._sigma is not None else 0.0,
-             "noise": self._sigma is not None}
+             "noise": self._sigma is not None,
+             "accountant": cfg.accountant,
+             **({"failure_prob": self._acct.failure_prob(d, cfg.dp_n,
+                                                         cfg.dp_gamma)}
+                if self._acct.failure_prob is not None
+                and self._sigma is not None else {})}
             for p, d, s in zip(self._paths, self._dims, sigmas))
         self.history.append({
             "round": self.round_idx, "fill": fill,

@@ -1,9 +1,9 @@
 """Versioned sweep artifact: JSON on disk, one record per scenario.
 
-Schema (version 2)::
+Schema (version 3)::
 
     {
-      "schema_version": 2,
+      "schema_version": 3,
       "kind": "repro.sweep",
       "meta": {"jax": ..., "device": ..., "preset": ...},
       "grid": {...} | null,             # originating ScenarioGrid, if any
@@ -14,7 +14,10 @@ Schema (version 2)::
                       | {"accuracy": ..},
           "spend":    {"eps_total": .., "delta_total": ..,
                        "n_transmissions": .., "eps_per_round": ..,
-                       "sigmas": [..]},
+                       "sigmas": [..], "accountant": ..,
+                       "sigma_ratio_vs_basic": ..,
+                       "failure_probs": [..] | absent,
+                       "per_leaf": [..] | absent},
           "comm":     {"bytes_per_machine": .., "bytes_per_round": ..,
                        "n_transmissions": .., "eps_per_round": ..,
                        "newton_bytes_per_machine": ..,
@@ -27,7 +30,10 @@ Schema (version 2)::
     }
 
 v2 added the "comm" record (repro/sweep/comm.py): transmission cost and
-per-round budget ride the same versioned artifact as MRSE. v1 artifacts
+per-round budget ride the same versioned artifact as MRSE. v3 added
+privacy accounting to the spend record: the repro.privacy registry
+accountant that certified the per-round budget, its noise ratio vs basic
+composition, and the high-probability failure ledger. Older artifacts
 fail validation, so a resume against one restarts cleanly instead of
 mixing schemas.
 
@@ -43,12 +49,12 @@ import os
 import tempfile
 from typing import Dict, Iterable, List, Optional, Set
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 KIND = "repro.sweep"
 
 _REQUIRED_RECORD_KEYS = ("scenario", "metrics", "spend", "comm", "timing")
 _REQUIRED_SPEND_KEYS = ("eps_total", "delta_total", "n_transmissions",
-                        "sigmas")
+                        "sigmas", "accountant")
 _REQUIRED_COMM_KEYS = ("bytes_per_machine", "bytes_per_round",
                        "n_transmissions")
 
@@ -133,6 +139,10 @@ def rows(artifact: Dict) -> List[Dict]:
         row["eps_total"] = rec["spend"]["eps_total"]
         row["delta_total"] = rec["spend"]["delta_total"]
         row["n_transmissions"] = rec["spend"]["n_transmissions"]
+        row["accountant"] = rec["spend"].get(
+            "accountant", rec["scenario"].get("accountant", "basic"))
+        row["sigma_ratio_vs_basic"] = rec["spend"].get(
+            "sigma_ratio_vs_basic", 1.0)
         row["bytes_per_machine"] = rec["comm"]["bytes_per_machine"]
         row["bytes_per_round"] = rec["comm"]["bytes_per_round"]
         row["group"] = rec["timing"]["group"]

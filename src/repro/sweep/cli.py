@@ -67,11 +67,21 @@ def main(argv=None) -> int:
                     help="chunk jit groups larger than N scenarios into "
                          "bounded batches (caps peak memory; the artifact "
                          "is written after every chunk)")
+    from repro.privacy import registered as registered_accountants
+    ap.add_argument("--accountant", default=None,
+                    choices=registered_accountants(),
+                    help="override every scenario's privacy accountant "
+                         "(repro.privacy registry) — the nightly "
+                         "accountant-sweep runs one preset per entry")
     args = ap.parse_args(argv)
 
     scenarios = build_preset(args.preset)
     if args.fast:
         scenarios = fast_variant(scenarios)
+    if args.accountant is not None:
+        import dataclasses
+        scenarios = [dataclasses.replace(s, accountant=args.accountant)
+                     for s in scenarios]
     groups = group_scenarios(scenarios)
     print(f"preset {args.preset!r}: {len(scenarios)} scenarios in "
           f"{len(groups)} jit group(s)")

@@ -153,7 +153,8 @@ class SweepExecutor:
                     lambda v: jnp.float32(v),
                     dp.calibrate_tree_sigmas(
                         params, s.n_per_machine(), s.eps, s.delta,
-                        (s.gamma,) * 5, s.tail))
+                        (s.gamma,) * 5, s.tail,
+                        accountant=s.accountant))
             else:
                 sigmas = {name: jnp.float32(0.0)
                           for name in dp.TREE_TRANSMISSIONS}
@@ -370,13 +371,28 @@ def _problem_for(scenario: Scenario):
 
 def _spend_record(s: Scenario, sigmas: np.ndarray) -> Dict:
     """Host-side exact privacy spend for the artifact (the traced ledger
-    carries the same numbers as f32; the accountant math stays in float)."""
+    carries the same numbers as f32; the accountant math stays in float).
+
+    Schema v3: the record names the accountant that certified the
+    per-round budget, its sigma ratio vs basic composition, and the
+    per-transmission sensitivity failure probabilities (nonzero for every
+    transmission under the "subexp" high-probability accountant)."""
+    from repro.core.protocol import _failure_probs
+    from repro.privacy import get_accountant, multiplier_ratio
     cfg = s.protocol_config()
     k = n_transmissions(cfg)
+    acct = get_accountant(s.accountant)
+    eps_r, delta_r = acct.per_round(s.eps, s.delta, k)
+    probs = _failure_probs(cfg, s.p, s.n)
     return {"eps_total": s.eps, "delta_total": s.delta,
-            "n_transmissions": k, "eps_per_round": s.eps / k,
-            "delta_per_round": s.delta / k,
-            "sigmas": [float(v) for v in sigmas]}
+            "n_transmissions": k, "eps_per_round": eps_r,
+            "delta_per_round": delta_r,
+            "sigmas": [float(v) for v in sigmas],
+            "accountant": acct.name,
+            "sigma_ratio_vs_basic":
+                multiplier_ratio(s.accountant, s.eps, s.delta, k),
+            "failure_probs": [float(f) for f in probs],
+            "failure_prob_total": min(1.0, float(sum(probs)))}
 
 
 def _train_spend_record(s: TrainScenario, params) -> Dict:
@@ -384,20 +400,28 @@ def _train_spend_record(s: TrainScenario, params) -> Dict:
     every transmission's sigma at every leaf's own dimension (the per-leaf
     calibration made auditable, core.dp.tree_spend_ledger)."""
     from repro.core import dp
+    from repro.privacy import get_accountant, multiplier_ratio
     k = len(dp.TREE_TRANSMISSIONS)
     if s.eps <= 0:
         return {"eps_total": 0.0, "delta_total": 0.0, "n_transmissions": k,
                 "eps_per_round": 0.0, "delta_per_round": 0.0,
-                "sigmas": [0.0] * k, "per_leaf": []}
+                "sigmas": [0.0] * k, "accountant": s.accountant,
+                "sigma_ratio_vs_basic": 1.0, "per_leaf": []}
+    acct = get_accountant(s.accountant)
+    eps_r, delta_r = acct.per_round(s.eps, s.delta, k)
     ledger = dp.tree_spend_ledger(params, s.n_per_machine(), s.eps,
-                                  s.delta, (s.gamma,) * 5, s.tail)
+                                  s.delta, (s.gamma,) * 5, s.tail,
+                                  accountant=s.accountant)
     sig_max = {name: max(r["sigma"] for r in ledger
                          if r["transmission"] == name)
                for name in dp.TREE_TRANSMISSIONS}
     return {"eps_total": s.eps, "delta_total": s.delta,
-            "n_transmissions": k, "eps_per_round": s.eps / k,
-            "delta_per_round": s.delta / k,
+            "n_transmissions": k, "eps_per_round": eps_r,
+            "delta_per_round": delta_r,
             "sigmas": [sig_max[name] for name in dp.TREE_TRANSMISSIONS],
+            "accountant": acct.name,
+            "sigma_ratio_vs_basic":
+                multiplier_ratio(s.accountant, s.eps, s.delta, k),
             "per_leaf": ledger}
 
 

@@ -24,6 +24,7 @@ from repro.agg import registered as registered_aggregators
 from repro.attacks import registered as registered_attacks
 from repro.attacks import resolve as resolve_attack
 from repro.configs.base import ProtocolConfig, TreeProtocolConfig
+from repro.privacy import registered as registered_accountants
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +33,10 @@ class Scenario:
 
     jit-static (part of the group key — changing them recompiles):
         problem, m, n, p, reps, attack, aggregator, center_trust, K,
-        trim_beta, gammas, lambda_s, tail, newton_steps, noiseless
+        trim_beta, gammas, lambda_s, tail, newton_steps, noiseless,
+        accountant (sigma calibration is host-side per scenario, so the
+        scaled sigmas still ride the vmap axis as traced arrays — but the
+        ledger semantics differ per accountant, so groups never mix them)
     dynamic (batched along the executor's scenario vmap axis):
         eps, delta, byz_frac, attack_factor, data_seed, rep_seeds
     data-only (select which arrays are fed, not how they are traced):
@@ -57,6 +61,7 @@ class Scenario:
     tail: str = "subexp"
     newton_steps: int = 25
     noiseless: bool = False
+    accountant: str = "basic"          # repro.privacy registry name
     reps: int = 5                      # Monte-Carlo replicates
     data_seed: int = 0
     # Explicit per-replicate PRNG seeds (tuple of ints, len == reps). None
@@ -88,22 +93,37 @@ class Scenario:
             raise ValueError(
                 f"unknown attack {self.attack!r}; registered: "
                 f"{registered_attacks()}")
+        if self.accountant not in registered_accountants():
+            # and on the privacy axis: the repro.privacy registry is the
+            # source of truth for composition rules
+            raise ValueError(
+                f"unknown accountant {self.accountant!r}; registered: "
+                f"{registered_accountants()}")
 
     # ------------------------------------------------------------- identity
 
     def canonical(self) -> Tuple:
-        """Stable full-field tuple (dict ordering is field order)."""
+        """Stable full-field tuple (dict ordering is field order).
+
+        ``accountant`` is EXCLUDED at its default "basic" so every
+        scenario id minted before the accountant axis existed — committed
+        golden keys, resumable artifacts — is byte-unchanged; non-basic
+        accountants hash in like any other field."""
         return tuple(sorted(
             (f.name, repr(getattr(self, f.name)))
-            for f in dataclasses.fields(self)))
+            for f in dataclasses.fields(self)
+            if not (f.name == "accountant"
+                    and getattr(self, f.name) == "basic")))
 
     def scenario_id(self) -> str:
         """Human-readable id, unique via a canonical-field hash; stable
         across processes (used as the resume key in artifacts)."""
         h = hashlib.sha1(repr(self.canonical()).encode()).hexdigest()[:8]
+        acct = "" if self.accountant == "basic" else f"-{self.accountant}"
         return (f"{self.dataset}-{self.problem}-m{self.m}-n{self.n}"
                 f"-p{self.p}-eps{self.eps:g}-byz{self.byz_frac:g}"
-                f"-{self.attack}-{self.aggregator}-{self.center_trust}-{h}")
+                f"-{self.attack}-{self.aggregator}-{self.center_trust}"
+                f"{acct}-{h}")
 
     def group_key(self) -> Tuple:
         """Everything baked into the jit trace: static config + shapes.
@@ -111,7 +131,7 @@ class Scenario:
         return (self.problem, self.m, self.n, self.p, self.reps,
                 self.attack, self.aggregator, self.center_trust, self.K,
                 self.trim_beta, self.gammas, self.lambda_s, self.tail,
-                self.newton_steps, self.noiseless)
+                self.newton_steps, self.noiseless, self.accountant)
 
     def protocol_config(self) -> ProtocolConfig:
         """Static protocol config for this scenario's jit group. eps/delta
@@ -122,7 +142,7 @@ class Scenario:
             lambda_s=self.lambda_s, tail=self.tail,
             aggregator=self.aggregator, trim_beta=self.trim_beta,
             center_trust=self.center_trust, newton_steps=self.newton_steps,
-            noiseless=self.noiseless)
+            noiseless=self.noiseless, accountant=self.accountant)
 
     def n_byzantine(self) -> int:
         return int(self.byz_frac * self.m)
@@ -178,6 +198,7 @@ class TrainScenario:
     tail: str = "subexp"
     K: int = 10
     trim_beta: float = 0.2
+    accountant: str = "basic"          # repro.privacy registry name
     seed: int = 0
 
     def __post_init__(self):
@@ -197,20 +218,28 @@ class TrainScenario:
             raise ValueError(
                 f"unknown attack {self.attack!r}; registered: "
                 f"{registered_attacks()}")
+        if self.accountant not in registered_accountants():
+            raise ValueError(
+                f"unknown accountant {self.accountant!r}; registered: "
+                f"{registered_accountants()}")
 
     # ------------------------------------------------------------- identity
 
     def canonical(self) -> Tuple:
+        # accountant excluded at "basic" for id stability, as in Scenario.
         return tuple(sorted(
             (f.name, repr(getattr(self, f.name)))
-            for f in dataclasses.fields(self)))
+            for f in dataclasses.fields(self)
+            if not (f.name == "accountant"
+                    and getattr(self, f.name) == "basic")))
 
     def scenario_id(self) -> str:
         h = hashlib.sha1(repr(self.canonical()).encode()).hexdigest()[:8]
+        acct = "" if self.accountant == "basic" else f"-{self.accountant}"
         return (f"zoo-{self.arch}-t{self.steps}-b{self.batch}"
                 f"-s{self.seq}-m{self.machines}-eps{self.eps:g}"
                 f"-byz{self.byz_frac:g}-{self.attack}-{self.aggregator}"
-                f"-{h}")
+                f"{acct}-{h}")
 
     def group_key(self) -> Tuple:
         """Leads with "zoo" so mixed sweeps bucket train and protocol
@@ -219,7 +248,7 @@ class TrainScenario:
         return ("zoo", self.arch, self.steps, self.batch, self.seq,
                 self.machines, self.aggregator, self.attack, self.hist,
                 self.lr, self.local_lr, self.local_steps, self.tail,
-                self.K, self.trim_beta, self.eps <= 0.0)
+                self.K, self.trim_beta, self.eps <= 0.0, self.accountant)
 
     def protocol_config(self) -> TreeProtocolConfig:
         """Static per-group config. eps is reduced to the NOISELESS FLAG
@@ -231,7 +260,7 @@ class TrainScenario:
             eps=1.0 if self.eps > 0 else 0.0, delta=self.delta,
             gammas=(self.gamma,) * 5, tail=self.tail,
             aggregator=self.aggregator, K=self.K,
-            trim_beta=self.trim_beta)
+            trim_beta=self.trim_beta, accountant=self.accountant)
 
     def n_byzantine(self) -> int:
         return int(self.byz_frac * self.machines)
@@ -257,6 +286,7 @@ class ScenarioGrid:
     byz_fracs: Tuple[float, ...] = (0.0,)
     center_trusts: Tuple[str, ...] = ("trusted",)
     attack_factors: Tuple[float, ...] = (-3.0,)
+    accountants: Tuple[str, ...] = ("basic",)
     # shared scalars
     n: int = 1000
     p: int = 10
@@ -279,17 +309,19 @@ class ScenarioGrid:
         return (len(self.problems) * len(self.attacks)
                 * len(self.aggregators) * len(self.eps_grid)
                 * len(self.m_grid) * len(self.byz_fracs)
-                * len(self.center_trusts) * len(self.attack_factors))
+                * len(self.center_trusts) * len(self.attack_factors)
+                * len(self.accountants))
 
     def expand(self) -> List[Scenario]:
         if self.data_seed_mode not in ("shared", "per-m"):
             raise ValueError(f"unknown data_seed_mode {self.data_seed_mode!r}")
         out = []
-        for (prob, attack, agg, eps, m, byz, trust, factor) in \
+        for (prob, attack, agg, eps, m, byz, trust, factor, acct) in \
                 itertools.product(self.problems, self.attacks,
                                   self.aggregators, self.eps_grid,
                                   self.m_grid, self.byz_fracs,
-                                  self.center_trusts, self.attack_factors):
+                                  self.center_trusts, self.attack_factors,
+                                  self.accountants):
             seed = (self.data_seed + m if self.data_seed_mode == "per-m"
                     else self.data_seed)
             out.append(Scenario(
@@ -299,7 +331,7 @@ class ScenarioGrid:
                 K=self.K, trim_beta=self.trim_beta, gammas=self.gammas,
                 lambda_s=self.lambda_s, tail=self.tail,
                 newton_steps=self.newton_steps, noiseless=self.noiseless,
-                reps=self.reps, data_seed=seed))
+                accountant=acct, reps=self.reps, data_seed=seed))
         return out
 
     def to_json(self) -> Dict:
@@ -316,17 +348,21 @@ def group_scenarios(scenarios: Iterable[Scenario]
 
 
 def group_label(key: Tuple) -> str:
-    """Short human-readable tag for a jit group (artifact/timing records)."""
+    """Short human-readable tag for a jit group (artifact/timing records).
+    The accountant rides last in both key layouts (after the noiseless
+    flag) and is tagged only when non-basic."""
+    accountant = key[-1]
     if key[0] == "zoo":
         _, arch, steps, batch, seq, machines, agg, attack = key[:8]
         tag = (f"zoo-{arch}-t{steps}-b{batch}-s{seq}-m{machines}"
                f"-{attack}-{agg}")
-        if key[-1]:
+        if key[-2]:
             tag += "-noiseless"
-        return tag
-    problem, m, n, p, reps, attack, agg, trust = key[:8]
-    noiseless = key[-1]
-    tag = f"{problem}-m{m}-n{n}-p{p}-r{reps}-{attack}-{agg}-{trust}"
-    if noiseless:
-        tag += "-noiseless"
+    else:
+        problem, m, n, p, reps, attack, agg, trust = key[:8]
+        tag = f"{problem}-m{m}-n{n}-p{p}-r{reps}-{attack}-{agg}-{trust}"
+        if key[-2]:
+            tag += "-noiseless"
+    if accountant != "basic":
+        tag += f"-{accountant}"
     return tag

@@ -1,0 +1,12 @@
+"""Seeded unused-suppression violations: reasoned waivers whose rule runs
+but never fires here. Both must be flagged as stale — the inline allow on
+clean single-use code and the file-wide allow-file whose rule finds
+nothing in this module."""
+# repro: allow-file(wire-boundary) — VIOLATION: no raw dispatch below.
+import jax
+
+
+def single_use(key):
+    # repro: allow(key-reuse) — VIOLATION: the double sample was removed.
+    a = jax.random.normal(key, (4,))
+    return a

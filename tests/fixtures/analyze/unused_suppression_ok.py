@@ -1,0 +1,17 @@
+"""Clean twin: every waiver earns its keep. One suppression silences a
+real key-reuse finding; the other names unused-suppression alongside its
+rule, the documented self-waiver for deliberately prophylactic markers."""
+import jax
+
+
+def earned(key):
+    a = jax.random.normal(key, (4,))
+    # repro: allow(key-reuse) — fixture: deliberate reuse kept for parity.
+    b = jax.random.normal(key, (4,))
+    return a + b
+
+
+def prophylactic(key):
+    # repro: allow(key-reuse, unused-suppression) — fixture: kept for a
+    # platform-dependent path that only reuses the key on some backends.
+    return jax.random.normal(key, (4,))

@@ -127,6 +127,51 @@ def test_suppression_parse_round_trip():
     assert by_kind["allow-file"].rules == ("wire-boundary",)
 
 
+def test_unused_suppression_flags_stale_waivers():
+    # full rule set: the waived rules run, find nothing, so both the
+    # inline allow and the file-wide allow-file are stale
+    report = analyze_paths(
+        [str(FIXTURES / "unused_suppression_bad.py")], include_fixtures=True
+    )
+    stale = [f for f in report.findings if f.rule == "unused-suppression"]
+    assert len(stale) == 2
+    assert {f.line for f in stale} == {5, 10}
+    assert all("stale waiver" in f.message for f in stale)
+    assert report.exit_code == 1
+
+
+def test_unused_suppression_silent_on_earned_and_self_waived():
+    report = analyze_paths(
+        [str(FIXTURES / "unused_suppression_ok.py")], include_fixtures=True
+    )
+    assert report.findings == [], [
+        (f.rule, f.line, f.message) for f in report.findings
+    ]
+    # the earned waiver silenced a real finding; the prophylactic one
+    # self-waived via allow(<rule>, unused-suppression)
+    assert any(f.rule == "key-reuse" for f in report.suppressed)
+    assert any(f.rule == "unused-suppression" for f in report.suppressed)
+
+
+def test_unused_suppression_respects_rule_subset():
+    # key-reuse did not run, so its waiver cannot be judged stale; the
+    # wire-boundary allow-file still can (its rule ran and found nothing)
+    report = analyze_paths(
+        [str(FIXTURES / "unused_suppression_bad.py")],
+        rules=["wire-boundary", "unused-suppression"],
+        include_fixtures=True,
+    )
+    assert [f.rule for f in report.findings] == ["unused-suppression"]
+    assert report.findings[0].line == 5
+    # and without unused-suppression in the set, nothing fires at all
+    report = analyze_paths(
+        [str(FIXTURES / "unused_suppression_bad.py")],
+        rules=["key-reuse", "wire-boundary"],
+        include_fixtures=True,
+    )
+    assert report.findings == []
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------

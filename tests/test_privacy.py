@@ -1,0 +1,277 @@
+"""repro.privacy registry: accountant contracts, byte-parity of the
+"basic" default against the historical calibration, sigma orderings at
+the paper's §5 budget, composition monotonicity, schema-v3 spend
+ledgers for every registered accountant, and the serve-path conversion.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dp
+from repro.core.protocol import (ProtocolConfig, accountant_round_budget,
+                                 calibrate_sigma_base)
+from repro.privacy import (get_accountant, multiplier_ratio, registered,
+                           resolve)
+from repro.sweep import Scenario, run_scenarios
+from repro.sweep import artifact as artifact_mod
+
+# the paper's §5 operating point: total budget (5, 1e-5) over the six
+# transmissions of untrusted-center Algorithm 1
+EPS, DELTA, K = 5.0, 1e-5, 6
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_contains_the_four_accountants():
+    assert set(registered()) == {"basic", "advanced", "rdp", "subexp"}
+    assert resolve(None) == "basic"
+    assert resolve("rdp") == "rdp"
+    with pytest.raises(KeyError, match="basic"):
+        get_accountant("typo")
+
+
+def test_every_accountant_certifies_its_own_composition():
+    """compose(per_round(eps, delta, k), k) must come back <= the total
+    budget it was split from — the registry's defining contract."""
+    for name in registered():
+        acct = get_accountant(name)
+        eps_r, delta_r = acct.per_round(EPS, DELTA, K)
+        assert eps_r > 0 and 0 < delta_r < 1
+        eps_back, delta_back = acct.compose(eps_r, delta_r, K)
+        assert eps_back <= EPS * (1 + 1e-9), name
+        assert delta_back <= DELTA * (1 + 1e-9), name
+
+
+def test_exact_basic_ratio_is_the_literal_one():
+    """basic/subexp short-circuit to 1.0 with no float math at all, and
+    advanced's best-of falls back to the basic candidate at small k, so
+    every one of them leaves the historical sigmas untouched."""
+    assert multiplier_ratio("basic", EPS, DELTA, K) == 1.0
+    assert multiplier_ratio("subexp", EPS, DELTA, K) == 1.0
+    assert get_accountant("basic").exact_basic
+    assert get_accountant("subexp").exact_basic
+    # KOV's sqrt(k) regime needs k >~ 2 ln(1/delta): at the paper's k=6
+    # the inverted advanced budget IS the even split (x/x == 1.0 exactly)
+    assert multiplier_ratio("advanced", EPS, DELTA, K) == 1.0
+
+
+def test_ratio_refuses_traced_budgets():
+    with pytest.raises(TypeError, match="host-side"):
+        jax.jit(lambda e: multiplier_ratio("rdp", e, DELTA, K))(EPS)
+
+
+# ----------------------------------------- byte parity of the default
+
+def test_basic_sigma_base_is_byte_identical():
+    """The accountant parameter must not perturb the default path: same
+    floats, bit for bit, with and without it (the CI smoke-golden gate
+    asserts the same thing end-to-end)."""
+    for trust in ("trusted", "untrusted"):
+        cfg = ProtocolConfig(eps=EPS, delta=DELTA, center_trust=trust)
+        legacy = calibrate_sigma_base(cfg, p=10, n=1000)
+        for out in (calibrate_sigma_base(cfg, p=10, n=1000,
+                                         accountant="basic"),
+                    calibrate_sigma_base(cfg, p=10, n=1000,
+                                         accountant="subexp")):
+            assert out == legacy            # exact float equality
+
+
+def test_tree_sigmas_basic_byte_identical_rdp_strictly_smaller():
+    tree = {"w": jnp.zeros((4, 3)), "b": jnp.zeros((3,))}
+    base = dp.calibrate_tree_sigmas(tree, n=500, eps=EPS, delta=DELTA)
+    again = dp.calibrate_tree_sigmas(tree, n=500, eps=EPS, delta=DELTA,
+                                     accountant="basic")
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.all(a == b)),
+        {k: base[k] for k in base}, {k: again[k] for k in again}))
+    tight = dp.calibrate_tree_sigmas(tree, n=500, eps=EPS, delta=DELTA,
+                                     accountant="rdp")
+    for name in base:
+        for s_b, s_r in zip(jax.tree_util.tree_leaves(base[name]),
+                            jax.tree_util.tree_leaves(tight[name])):
+            assert bool(jnp.all(s_r < s_b)), name
+
+
+# ------------------------------------------- sigma ordering at §5 budget
+
+def test_rdp_strictly_beats_basic_on_every_transmission():
+    cfg = ProtocolConfig(eps=EPS, delta=DELTA, center_trust="untrusted")
+    base = calibrate_sigma_base(cfg, p=10, n=1000)
+    assert len(base) == K
+    tight = calibrate_sigma_base(cfg, p=10, n=1000, accountant="rdp")
+    for s_b, s_r in zip(base, tight):
+        assert s_r < s_b
+    # the measured tightening at this budget: ~2.65x less noise
+    ratio = multiplier_ratio("rdp", EPS, DELTA, K)
+    assert 0.3 < ratio < 0.45
+    adv = calibrate_sigma_base(cfg, p=10, n=1000, accountant="advanced")
+    for s_b, s_a in zip(base, adv):
+        assert s_a <= s_b                    # never worse than basic
+
+
+def test_advanced_strictly_beats_basic_at_large_k():
+    """KOV Cor 4.1 wins once k >~ 2 ln(1/delta); document the crossover
+    the README table quotes (k=6 ties, k=60 strictly better)."""
+    assert multiplier_ratio("advanced", 1.0, 1e-6, 60) < 1.0
+    eps_r, delta_r = get_accountant("advanced").per_round(1.0, 1e-6, 60)
+    assert eps_r > 1.0 / 60                  # a larger per-round share...
+    sig_adv = dp.noise_multiplier(eps_r, delta_r)
+    sig_basic = dp.noise_multiplier(1.0 / 60, 1e-6 / 60)
+    assert sig_adv < sig_basic               # ...means less noise
+
+
+def test_compose_monotonicity_rdp_advanced_basic():
+    """Composing each accountant's own per-round budget back up must
+    order eps_rdp <= eps_advanced <= eps_basic at the §5 setting."""
+    totals = {}
+    for name in ("basic", "advanced", "rdp"):
+        acct = get_accountant(name)
+        eps_r, delta_r = acct.per_round(EPS, DELTA, K)
+        totals[name] = acct.compose(eps_r, delta_r, K)[0]
+    assert totals["rdp"] <= totals["advanced"] * (1 + 1e-9)
+    assert totals["advanced"] <= totals["basic"] * (1 + 1e-9)
+    assert totals["basic"] == pytest.approx(EPS)
+
+
+def test_accountant_round_budget_matches_registry():
+    cfg = ProtocolConfig(eps=EPS, delta=DELTA, center_trust="untrusted",
+                         accountant="rdp")
+    eps_r, delta_r = accountant_round_budget(cfg)
+    want = get_accountant("rdp").per_round(EPS, DELTA, K)
+    assert (eps_r, delta_r) == want
+    basic_cfg = ProtocolConfig(eps=EPS, delta=DELTA)
+    assert accountant_round_budget(basic_cfg) == (EPS / 5, DELTA / 5)
+
+
+# ------------------------------------- schema-v3 ledger, every accountant
+
+M, N, P = 6, 400, 4
+
+
+@pytest.mark.slow
+def test_spend_ledger_round_trips_for_every_accountant(tmp_path):
+    scens = [Scenario(problem="logistic", m=M, n=N, p=P, eps=20.0,
+                      delta=0.05, reps=1, data_seed=0, accountant=a)
+             for a in registered()]
+    assert len({s.scenario_id() for s in scens}) == len(scens)
+    art = run_scenarios(scens)
+    path = tmp_path / "acct.json"
+    artifact_mod.save(art, str(path))
+    loaded = artifact_mod.load(str(path))
+    for s in scens:
+        spend = loaded["scenarios"][s.scenario_id()]["spend"]
+        assert spend["accountant"] == s.accountant
+        assert len(spend["sigmas"]) == spend["n_transmissions"] == 5
+        ratio = spend["sigma_ratio_vs_basic"]
+        if s.accountant == "rdp":
+            assert ratio < 1.0
+        else:                       # basic, subexp, advanced at k=5
+            assert ratio == 1.0
+        if s.accountant == "subexp":
+            assert len(spend["failure_probs"]) == 5
+            assert all(f > 0 for f in spend["failure_probs"])
+            assert spend["failure_prob_total"] == pytest.approx(
+                min(1.0, sum(spend["failure_probs"])))
+        row = [r for r in artifact_mod.rows(loaded)
+               if r["scenario_id"] == s.scenario_id()][0]
+        assert row["accountant"] == s.accountant
+
+
+def test_tree_ledger_records_accountant_and_failure_prob():
+    tree = {"w": jnp.zeros((4, 3)), "b": jnp.zeros((3,))}
+    recs = dp.tree_spend_ledger(tree, n=500, eps=EPS, delta=DELTA,
+                                accountant="subexp")
+    assert recs and all(r["accountant"] == "subexp" for r in recs)
+    assert all(r["failure_prob"] > 0 for r in recs)
+    plain = dp.tree_spend_ledger(tree, n=500, eps=EPS, delta=DELTA)
+    assert all(r["accountant"] == "basic" for r in plain)
+    assert all("failure_prob" not in r for r in plain)
+    # rdp's standalone per-round eps is LARGER than the even split (it
+    # pays for composing tightly), but the sigma it buys is smaller
+    tight = dp.tree_spend_ledger(tree, n=500, eps=EPS, delta=DELTA,
+                                 accountant="rdp")
+    assert tight[0]["eps"] > plain[0]["eps"]
+    assert tight[0]["sigma"] < plain[0]["sigma"]
+
+
+# ------------------------------------------------------------ serve path
+
+def test_serve_accountant_scales_sigma_and_annotates_ledger():
+    from repro.serve import AggregationService, FlushPolicy, ServeConfig
+
+    def theta():                 # fresh per service: the step donates it
+        return {"w": jnp.zeros((3,))}
+
+    kw = dict(method="median", capacity=4, eps=1.0, delta=1e-5,
+              ingest_block=2)
+    basic = AggregationService(theta(), ServeConfig(**kw),
+                               policy=FlushPolicy(min_fill=1))
+    tight = AggregationService(theta(), ServeConfig(accountant="rdp",
+                                                    **kw),
+                               policy=FlushPolicy(min_fill=1))
+    s_b = jax.tree_util.tree_leaves(basic._sigma)[0]
+    s_r = jax.tree_util.tree_leaves(tight._sigma)[0]
+    assert float(s_r) < float(s_b)          # k=1 tight conversion wins
+    hp = AggregationService(theta(), ServeConfig(accountant="subexp",
+                                                 **kw),
+                            policy=FlushPolicy(min_fill=1))
+    s_h = jax.tree_util.tree_leaves(hp._sigma)[0]
+    assert float(s_h) == float(s_b)         # exact_basic: untouched
+    hp.submit(jax.tree_util.tree_map(jnp.ones_like, theta()))
+    hp.flush()
+    assert hp.ledger and hp.ledger[0]["accountant"] == "subexp"
+    assert hp.ledger[0]["failure_prob"] > 0
+    basic.submit(jax.tree_util.tree_map(jnp.ones_like, theta()))
+    basic.flush()
+    assert basic.ledger[0]["accountant"] == "basic"
+    assert "failure_prob" not in basic.ledger[0]
+    with pytest.raises(KeyError):
+        AggregationService(theta(), ServeConfig(accountant="nope", **kw))
+
+
+# ----------------------------------------------- golden-key stability
+
+def test_scenario_ids_stable_for_basic_distinct_for_others():
+    base = Scenario(problem="logistic", m=M, n=N, p=P, eps=10.0)
+    explicit = Scenario(problem="logistic", m=M, n=N, p=P, eps=10.0,
+                        accountant="basic")
+    assert base.scenario_id() == explicit.scenario_id()
+    assert "accountant" not in dict(base.canonical())
+    tight = Scenario(problem="logistic", m=M, n=N, p=P, eps=10.0,
+                     accountant="rdp")
+    assert tight.scenario_id() != base.scenario_id()
+    assert "-rdp-" in tight.scenario_id()
+    assert base.group_key() != tight.group_key()   # separate jit groups
+    with pytest.raises(ValueError, match="accountant"):
+        Scenario(problem="logistic", m=M, n=N, p=P, accountant="typo")
+
+
+# ----------------------------- total_advanced silent-fallback regression
+
+def test_total_advanced_heterogeneous_fallback_is_annotated():
+    """Heterogeneous per-round budgets used to fall back to basic
+    composition SILENTLY — the ledger now records the downgrade and
+    warns exactly once per accountant instance."""
+    a = dp.PrivacyAccountant()
+    a.spend("r1", 1.0, 1e-4, 0.5)
+    a.spend("r2", 2.0, 1e-4, 0.5)           # different eps: heterogeneous
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        total = a.total_advanced()
+        again = a.total_advanced()          # second call: no second warn
+    assert total == a.total_basic() == again
+    runtime = [w for w in caught if issubclass(w.category, RuntimeWarning)]
+    assert len(runtime) == 1
+    assert "heterogeneous" in str(runtime[0].message)
+    assert a.notes and "heterogeneous" in a.notes[0]
+    assert "note:" in a.summary()
+    # homogeneous spends: advanced composition, no note, no warning
+    b = dp.PrivacyAccountant()
+    for i in range(3):
+        b.spend(f"r{i}", 1.0, 1e-4, 0.5)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        b.total_advanced()
+    assert not caught and not b.notes

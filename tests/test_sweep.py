@@ -249,17 +249,28 @@ def test_comm_record_rides_artifact(two_eps_artifact):
         assert comm["newton_bytes_per_machine"] > comm["bytes_per_machine"]
 
 
-def test_artifact_v2_rejects_missing_comm(two_eps_artifact):
+def test_artifact_v3_rejects_missing_comm_and_accountant(two_eps_artifact):
     _, _, art = two_eps_artifact
     import json as _json
     bad = _json.loads(_json.dumps(art))
     next(iter(bad["scenarios"].values())).pop("comm")
     with pytest.raises(ValueError, match="missing 'comm'"):
         artifact_mod.validate(bad)
-    assert art["schema_version"] == 2
-    # flat rows expose the byte columns for plotting
+    bad = _json.loads(_json.dumps(art))
+    next(iter(bad["scenarios"].values()))["spend"].pop("accountant")
+    with pytest.raises(ValueError, match="missing 'accountant'"):
+        artifact_mod.validate(bad)
+    assert art["schema_version"] == 3
+    # a v2 artifact (pre-accountant) fails validation, so resume restarts
+    bad = _json.loads(_json.dumps(art))
+    bad["schema_version"] = 2
+    with pytest.raises(ValueError, match="schema_version"):
+        artifact_mod.validate(bad)
+    # flat rows expose the byte + accounting columns for plotting
     row = artifact_mod.rows(art)[0]
     assert "bytes_per_machine" in row and "bytes_per_round" in row
+    assert row["accountant"] == "basic"
+    assert row["sigma_ratio_vs_basic"] == 1.0
 
 
 # --------------------------------------------------------------- artifact
